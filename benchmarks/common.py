@@ -1,0 +1,27 @@
+"""Shared benchmark plumbing: CSV emission + workload/cluster subsets."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+        self.us = self.seconds * 1e6
+        return False
+
+
+def small_workload(n_per_cat: int = 2, n_steps: int = 64):
+    """A reduced Table 1 workload (same 9 categories) for fast benches."""
+    from repro.pricing.workload import TABLE1_CATEGORIES, table1_workload
+    cats = [(c, min(n, n_per_cat)) for c, n in TABLE1_CATEGORIES]
+    return table1_workload(seed=2015, n_steps=n_steps, categories=cats)

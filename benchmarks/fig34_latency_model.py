@@ -1,0 +1,83 @@
+"""Paper Figs 3 & 4: latency-model incorporation + extrapolation error.
+
+Fig 3 (incorporation): for a fixed run-time target, sweep the benchmark
+budget (as a benchmark:run-time path ratio) and report the mean relative
+error of the latency prediction — it must fall as the budget grows.
+
+Fig 4 (extrapolation): fix the benchmark budget and grow the run-time
+target by up to ~2 orders of magnitude — error must stay bounded.
+
+Platforms: representative Table 2 rows (simulated; incl. the Cape Town
+RTT-dominated rows that the paper calls out as hard) plus the REAL local
+JAX engine, labelled `real.local_jax`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import relative_error
+from repro.pricing import (LocalJaxPlatform, SimulatedPlatform, TABLE2_SPECS,
+                           benchmark)
+from repro.pricing.platforms import fit_models
+
+from .common import emit, small_workload, timer
+
+RATIOS = (0.01, 0.03, 0.1, 0.3, 1.0)
+SIM_ROWS = {"Desktop": 0, "Local GPU 1": 9, "Remote Server": 3,
+            "AWS GPU EC": 12}
+
+
+def _sweep(platform, task, runtime_paths: int, label: str):
+    run = platform.run(task, runtime_paths, seed=99)
+    errs = []
+    for ratio in RATIOS:
+        bench_paths = max(int(runtime_paths * ratio), 256)
+        ladder = np.unique((bench_paths * np.array([0.25, 0.5, 1.0])
+                            ).astype(int))
+        m = fit_models(benchmark(platform, task, ladder.tolist()))
+        errs.append(float(relative_error(m.latency(runtime_paths),
+                                         run.latency)))
+        emit(f"fig3.incorporation.{label}.ratio_{ratio}", 0.0,
+             f"rel_err={errs[-1]:.4f}")
+    return errs
+
+
+def main(fast: bool = True) -> None:
+    tasks = small_workload(1)
+    task = tasks[4]  # an H-A task (Heston Asian: mid complexity)
+
+    for name, idx in SIM_ROWS.items():
+        p = SimulatedPlatform(TABLE2_SPECS[idx])
+        errs = _sweep(p, task, runtime_paths=1_000_000,
+                      label="sim." + name.replace(" ", "_"))
+        # incorporation property: more benchmark -> not worse
+        emit(f"fig3.monotone.sim.{name.replace(' ', '_')}", 0.0,
+             f"first={errs[0]:.4f};last={errs[-1]:.4f}")
+
+    # extrapolation (Fig 4): bench at 16k paths, predict up to 64x more
+    for name, idx in SIM_ROWS.items():
+        p = SimulatedPlatform(TABLE2_SPECS[idx])
+        m = fit_models(benchmark(p, task, (4_096, 8_192, 16_384)))
+        for mult in (1, 4, 16, 64):
+            n = 16_384 * mult
+            run = p.run(task, n, seed=123)
+            err = float(relative_error(m.latency(n), run.latency))
+            emit(f"fig4.extrapolation.sim.{name.replace(' ', '_')}.x{mult}",
+                 0.0, f"rel_err={err:.4f}")
+
+    # the real platform (wall-clock ground truth)
+    local = LocalJaxPlatform()
+    with timer() as t:
+        m = fit_models(benchmark(local, task, (2_048, 8_192, 32_768)))
+    emit("fig34.real.local_jax.fit", t.us,
+         f"beta={m.latency.beta:.3e};gamma={m.latency.gamma:.3e}")
+    for mult in (1, 4, 16):
+        n = 32_768 * mult
+        run = local.run(task, n, seed=5)
+        err = float(relative_error(m.latency(n), run.latency))
+        emit(f"fig4.extrapolation.real.local_jax.x{mult}", 0.0,
+             f"rel_err={err:.4f}")
+
+
+if __name__ == "__main__":
+    main()

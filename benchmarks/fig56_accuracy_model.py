@@ -1,0 +1,55 @@
+"""Paper Figs 5 & 6: accuracy-model incorporation + extrapolation error,
+reported per task category as (min, geometric mean, max) — the paper's
+radial plots. Ground truth from the REAL engine (the accuracy metric is a
+statistical property, platform-independent)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import fit_accuracy_model, relative_error
+from repro.pricing import price
+
+from .common import emit, small_workload
+
+
+def _true_ci(task, n, seed=7):
+    return float(price(task, n, seed=seed).ci95)
+
+
+def main(fast: bool = True) -> None:
+    tasks = small_workload(2 if fast else 5, n_steps=32)
+    runtime_paths = 65_536
+    cats: dict[str, list[float]] = {}
+
+    for ratio in (0.05, 0.25, 1.0):
+        cats.clear()
+        for task in tasks:
+            bench = max(int(runtime_paths * ratio), 512)
+            ladder = [bench // 4, bench // 2, bench]
+            cis = [_true_ci(task, n) for n in ladder]
+            m = fit_accuracy_model(ladder, cis)
+            err = float(relative_error(m(runtime_paths),
+                                       _true_ci(task, runtime_paths)))
+            cats.setdefault(task.category, []).append(err)
+        for cat, errs in sorted(cats.items()):
+            gmean = float(np.exp(np.mean(np.log(np.maximum(errs, 1e-9)))))
+            emit(f"fig5.incorporation.{cat}.ratio_{ratio}", 0.0,
+                 f"min={min(errs):.4f};gmean={gmean:.4f};max={max(errs):.4f}")
+
+    # Fig 6: fixed benchmark (16k), growing run-time target
+    for mult in (1, 4, 16):
+        cats.clear()
+        for task in tasks:
+            ladder = [4_096, 8_192, 16_384]
+            m = fit_accuracy_model(ladder, [_true_ci(task, n) for n in ladder])
+            n = 16_384 * mult
+            err = float(relative_error(m(n), _true_ci(task, n, seed=11)))
+            cats.setdefault(task.category, []).append(err)
+        allerrs = [e for v in cats.values() for e in v]
+        gmean = float(np.exp(np.mean(np.log(np.maximum(allerrs, 1e-9)))))
+        emit(f"fig6.extrapolation.x{mult}", 0.0,
+             f"gmean={gmean:.4f};max={max(allerrs):.4f}")
+
+
+if __name__ == "__main__":
+    main()

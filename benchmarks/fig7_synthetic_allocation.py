@@ -1,0 +1,60 @@
+"""Paper Fig 7: allocation-approach characterisation on synthetic data.
+
+(a/b) solve time vs problem size and vs constant-to-coefficient ratio psi;
+(c/d) improvement over the proportional heuristic for the same sweeps.
+Uses the Braun-style generator with the paper's Table 3 cases.
+"""
+from __future__ import annotations
+
+from repro.core import milp_allocation, ml_allocation, proportional_allocation
+from repro.core.synthetic import generate_case
+
+from .common import emit, timer
+
+SOLVERS = {
+    "heuristic": lambda p, tl: proportional_allocation(p),
+    "ml": lambda p, tl: ml_allocation(p, chains=16, steps=3000, rounds=1,
+                                      time_limit=tl),
+    "milp": lambda p, tl: milp_allocation(p, time_limit=tl),
+}
+
+
+def main(fast: bool = True) -> None:
+    time_limit = 30 if fast else 600
+    sizes = [(4, 16), (8, 32), (16, 64)] if fast else \
+        [(4, 16), (8, 32), (16, 64), (16, 128), (32, 256)]
+
+    # (a)+(c): size sweep at psi=1, Het-Inc (the paper's hardest case)
+    for mu, tau in sizes:
+        prob = generate_case("Het-Inc", tau=tau, mu=mu, psi=1.0, seed=0)
+        h = proportional_allocation(prob)
+        for name, solve in SOLVERS.items():
+            with timer() as t:
+                a = solve(prob, time_limit)
+            emit(f"fig7a.size_{mu}x{tau}.{name}", t.us,
+                 f"makespan={a.makespan:.1f};improvement={h.makespan/a.makespan:.2f}x")
+
+    # (b)+(d): psi sweep at fixed size — the nonlinearity knob
+    mu, tau = (8, 32) if fast else (16, 64)
+    for psi in (0.01, 0.1, 1.0, 10.0, 100.0):
+        prob = generate_case("Het-Inc", tau=tau, mu=mu, psi=psi, seed=1)
+        h = proportional_allocation(prob)
+        for name, solve in SOLVERS.items():
+            if name == "heuristic":
+                continue
+            with timer() as t:
+                a = solve(prob, time_limit)
+            emit(f"fig7b.psi_{psi}.{name}", t.us,
+                 f"improvement={h.makespan/a.makespan:.2f}x")
+
+    # Table 3 case sweep (Hom-Con .. Het-Inc)
+    for case in ("Hom-Con", "Het-Con", "Het-Mix", "Het-Inc"):
+        prob = generate_case(case, tau=32, mu=8, psi=1.0, seed=2)
+        h = proportional_allocation(prob)
+        a = milp_allocation(prob, time_limit=time_limit)
+        emit(f"fig7.table3.{case}.milp", a.solve_time * 1e6,
+             f"improvement={h.makespan/a.makespan:.2f}x;optimal={a.optimal}")
+
+
+if __name__ == "__main__":
+    main()

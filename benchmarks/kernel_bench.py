@@ -1,0 +1,34 @@
+"""Monte Carlo kernel benchmark: Pallas (interpret) vs jnp oracle, block
+sweep. On CPU the interpreter is a correctness tool, not a speed tool —
+the numbers recorded here are the blocking/shape trade-off data that the
+§Perf VMEM-tiling argument reads from."""
+from __future__ import annotations
+
+from repro.kernels import ops, ref
+from repro.pricing import BlackScholes, PricingTask, european
+
+from .common import emit, timer
+
+
+def main(fast: bool = True) -> None:
+    task = PricingTask(underlying=BlackScholes(100.0, 0.05, 0.2),
+                       option=european(100.0), maturity=1.0,
+                       n_steps=16, task_id=42)
+    n = 16_384
+    # oracle
+    ref.mc_moments_ref(task, n)  # warm
+    with timer() as t:
+        s, _ = ref.mc_moments_ref(task, n)
+        s.block_until_ready()
+    emit("kernel.oracle_jnp.16k_paths", t.us, f"sum={float(s):.1f}")
+    for bp in (512, 1024, 4096):
+        ops.mc_moments(task, n, seed=0, block_paths=bp)  # warm
+        with timer() as t:
+            s, _ = ops.mc_moments(task, n, seed=0, block_paths=bp)
+            s.block_until_ready()
+        emit(f"kernel.pallas_interpret.block_{bp}", t.us,
+             f"blocks={n // bp};sum={float(s):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""§Roofline data: the per-cell three-term table from dry-run artifacts.
+
+Reads artifacts/dryrun/<mesh>/*.json (produced by repro.launch.dryrun,
+which needs its own 512-device process) and prints the roofline terms.
+Skipped gracefully when no artifacts exist yet.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.analysis import analyze, format_table
+
+from .common import emit
+
+ART = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def main(fast: bool = True) -> None:
+    found = False
+    for mesh_dir in sorted(glob.glob(os.path.join(ART, "*"))):
+        mesh = os.path.basename(mesh_dir)
+        chips = 1
+        for part in mesh.split("x"):
+            chips *= int(part)
+        rows = []
+        for path in sorted(glob.glob(os.path.join(mesh_dir, "*.json"))):
+            if "__" not in os.path.basename(path) or path.count("__") > 1:
+                continue  # skip tagged (hillclimb) artifacts
+            with open(path) as f:
+                d = json.load(f)
+            if not d.get("ok"):
+                emit(f"roofline.{mesh}.{d['arch']}.{d['shape']}", 0.0,
+                     "FAILED")
+                continue
+            r = analyze(d, chips=chips)
+            rows.append(r)
+            emit(f"roofline.{mesh}.{r.arch}.{r.shape}", r.step_time_s * 1e6,
+                 f"bound={r.bottleneck};compute_s={r.compute_s:.4g};"
+                 f"memory_s={r.memory_s:.4g};collective_s={r.collective_s:.4g};"
+                 f"mfu={r.mfu:.4f};useful={r.useful_flops_ratio:.4f}")
+            found = True
+        if rows:
+            print(format_table(rows))
+    if not found:
+        emit("roofline.no_artifacts", 0.0,
+             "run `python -m repro.launch.dryrun` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 1: the 128-task workload — generation + kFLOP/path check."""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.pricing import kflop_per_path, price, table1_workload
+
+from .common import emit, timer
+
+
+def main(fast: bool = True) -> None:
+    with timer() as t:
+        tasks = table1_workload()
+    counts = Counter(t.category for t in tasks)
+    emit("table1.generate_128_tasks", t.us, f"categories={len(counts)}")
+    for cat, n in sorted(counts.items()):
+        kf = [kflop_per_path(tk) for tk in tasks if tk.category == cat]
+        emit(f"table1.kflop_per_path.{cat}", 0.0,
+             f"count={n};kflop={kf[0]:.3f}")
+    # complexity spread must stay within an order of magnitude (the
+    # paper's rejection criterion)
+    kfs = [kflop_per_path(t) for t in tasks]
+    emit("table1.complexity_spread", 0.0,
+         f"max_over_min={max(kfs)/min(kfs):.2f}")
+    # one real pricing call per underlying family (engine wall time)
+    for tk in (tasks[0], tasks[40]):
+        price(tk, 4096)  # warm
+        with timer() as t:
+            res = price(tk, 4096)
+            res.price.block_until_ready()
+        emit(f"table1.price_4k_paths.{tk.category}", t.us,
+             f"price={float(res.price):.4f};ci95={float(res.ci95):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 2: the 16-platform heterogeneous cluster."""
+from __future__ import annotations
+
+from repro.pricing import TABLE2_SPECS, SimulatedPlatform, table1_workload
+
+from .common import emit, timer
+
+
+def main(fast: bool = True) -> None:
+    task = table1_workload(n_steps=64)[0]
+    assert len(TABLE2_SPECS) == 16
+    for spec in TABLE2_SPECS:
+        p = SimulatedPlatform(spec)
+        with timer() as t:
+            rec = p.run(task, 100_000)
+        emit(f"table2.run100k.{spec.name.replace(' ', '_')}", t.us,
+             f"gflops={spec.gflops};rtt_ms={spec.rtt_ms};"
+             f"sim_latency_s={rec.latency:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Serve a small LM with batched requests: prefill + token-by-token decode
+with a KV cache, reporting the serving latency model (beta, gamma).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6_1b6]
+
+Defaults to the qwen family; try --arch rwkv6_1b6 or recurrentgemma_9b to
+see the O(1)/O(window) state architectures (their decode beta does not
+grow with context — the long_500k argument in miniature).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen25_3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    import repro.launch.serve as S
+    raise SystemExit(S.main([
+        "--arch", args.arch, "--smoke", "--batch", str(args.batch),
+        "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end driver: train a ~100M-parameter qwen2.5-family model for a
+few hundred steps on the local device, with checkpointing and the online
+latency model (the paper's eq. 7 populated from live step times).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This wraps repro.launch.train with a ~100M config (the assigned configs
+are multi-billion-parameter; this is the same family scaled to fit CPU).
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+
+    # ~100M params: 12L x 512d x 8H, 32k vocab (qwen-family: GQA+bias+swiglu)
+    cfg = dataclasses.replace(
+        get_config("qwen25_3b"),
+        name="qwen2.5-100m", n_layers=12, d_model=512, n_heads=8,
+        n_kv_heads=2, head_dim=64, d_ff=1408, vocab=32_768,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    total, _ = cfg.param_count()
+    total += 2 * cfg.vocab * cfg.d_model
+    print(f"config: {cfg.name}  ~{total/1e6:.0f}M params")
+
+    import repro.launch.train as T
+
+    raise SystemExit(T.main(
+        ["--steps", str(args.steps), "--batch", str(args.batch),
+         "--seq", str(args.seq), "--ckpt-dir", args.ckpt_dir,
+         "--ckpt-every", "100", "--lr", "6e-4",
+         "--warmup", "50", "--log-every", "20"],
+        cfg=cfg))
+
+
+if __name__ == "__main__":
+    main()

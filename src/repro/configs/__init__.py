@@ -1,0 +1,57 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``ARCHS``.
+
+Every entry is the exact published configuration from the assignment
+table; ``get_config(name).smoke()`` derives the reduced same-family config
+used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, SHAPES, Shape
+
+__all__ = ["ARCHS", "get_config", "cells_for", "all_cells"]
+
+ARCHS: tuple[str, ...] = (
+    "starcoder2_7b",
+    "yi_9b",
+    "minitron_8b",
+    "qwen25_3b",
+    "rwkv6_1b6",
+    "internvl2_76b",
+    "whisper_tiny",
+    "moonshot_v1_16b_a3b",
+    "arctic_480b",
+    "recurrentgemma_9b",
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def cells_for(cfg: ModelConfig) -> list[Shape]:
+    """The runnable (arch x shape) cells. long_500k needs sub-quadratic
+    attention (skips noted in DESIGN.md §Arch-applicability); decode
+    shapes need a decoder."""
+    cells = []
+    for shape in SHAPES.values():
+        if shape.kind == "decode" and not cfg.has_decoder:
+            continue
+        if shape.name == "long_500k" and not cfg.subquadratic:
+            continue
+        cells.append(shape)
+    return cells
+
+
+def all_cells() -> list[tuple[str, Shape]]:
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in cells_for(cfg):
+            out.append((arch, shape))
+    return out

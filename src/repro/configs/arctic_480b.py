@@ -1,0 +1,11 @@
+"""Snowflake Arctic [hf:Snowflake/snowflake-arctic-base]: 128-expert top-2
+MoE with a parallel dense-residual MLP."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000, head_dim=128,
+    n_experts=128, top_k=2, dense_residual=True, mlp_variant="swiglu",
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,12 @@
+"""InternVL2-Llama3-76B [arXiv:2404.16821]: InternViT frontend (STUB:
+input_specs supplies patch embeddings) + 80L GQA backbone."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab=128256, head_dim=128,
+    mlp_variant="swiglu", rope_theta=5e5,
+    frontend_len=256,  # ViT patch tokens per image (stubbed embeddings)
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,11 @@
+"""Minitron-8B [arXiv:2407.14679]: pruned Nemotron-4, GQA kv=8, 256k vocab."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=16384, vocab=256000, head_dim=128,
+    mlp_variant="gelu",  # nemotron uses squared-relu; non-gated family
+    rope_theta=1e4,
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,11 @@
+"""Moonlight-16B-A3B [hf:moonshotai/Moonlight-16B-A3B]: 64-expert top-6
+MoE (3B active), MHA (kv=16)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=163840, head_dim=128,
+    n_experts=64, top_k=6, mlp_variant="swiglu",
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,10 @@
+"""Qwen2.5-3B [hf:Qwen/Qwen2.5]: GQA kv=2 with QKV bias, SwiGLU, 152k vocab."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b", family="dense",
+    n_layers=36, d_model=2048, n_heads=16, n_kv_heads=2,
+    d_ff=11008, vocab=151936, head_dim=128,
+    qkv_bias=True, mlp_variant="swiglu", rope_theta=1e6,
+)
+SMOKE = CONFIG.smoke()

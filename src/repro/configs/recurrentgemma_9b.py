@@ -1,0 +1,14 @@
+"""RecurrentGemma-9B / Griffin [arXiv:2402.19427]: RG-LRU + local MQA
+(window 2048), pattern (rec, rec, attn). Sub-quadratic: O(window) cache
+=> long_500k runs."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1,
+    d_ff=12288, vocab=256000, head_dim=256,
+    mlp_variant="geglu", local_window=2048, d_rnn=4096,
+    hybrid_pattern=("rec", "rec", "attn"),
+    subquadratic=True,
+)
+SMOKE = CONFIG.smoke()

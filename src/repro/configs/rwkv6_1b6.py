@@ -1,0 +1,11 @@
+"""RWKV-6 "Finch" 1.6B [arXiv:2404.05892]: attention-free, data-dependent
+decay. Sub-quadratic: O(1) decode state => long_500k runs."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="rwkv",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=7168, vocab=65536, head_dim=64,
+    subquadratic=True,
+)
+SMOKE = CONFIG.smoke()

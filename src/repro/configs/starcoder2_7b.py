@@ -1,0 +1,10 @@
+"""StarCoder2-7B [arXiv:2402.19173]: dense GQA + RoPE, non-gated GELU MLP."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab=49152, head_dim=128,
+    mlp_variant="gelu", rope_theta=1e5,
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,12 @@
+"""Whisper-tiny [arXiv:2212.04356]: enc-dec; conv mel frontend is a STUB
+(input_specs supplies frame embeddings [B, 1500, 384])."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865, head_dim=64,
+    mlp_variant="gelu", encoder_layers=4,
+    frontend_len=1500,  # 30 s of audio at 50 Hz after the conv stub
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,10 @@
+"""Yi-9B [arXiv:2403.04652]: llama-architecture GQA, SwiGLU."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b", family="dense",
+    n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4,
+    d_ff=11008, vocab=64000, head_dim=128,
+    mlp_variant="swiglu", rope_theta=1e4,
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,33 @@
+"""repro.core — the paper's contribution: domain metric models + allocation.
+
+Public API:
+
+    Metric models (§3.1/§4.2): LatencyModel, AccuracyModel, CombinedModel,
+        fit_latency_model, fit_accuracy_model, relative_error
+    Allocation (§3.2/§4.3): AllocationProblem, Allocation, makespan,
+        proportional_allocation (eq. 11), ml_allocation (SA + LP polish),
+        milp_allocation (eq. 12 via HiGHS)
+    Synthetic characterisation (§6.1): synthetic.generate / TABLE3_CASES
+    Pareto surfaces (§3.2.3): pareto.sweep / platform_curves
+"""
+from .allocation import (  # noqa: F401
+    SUPPORT_ATOL,
+    Allocation,
+    AllocationProblem,
+    check_allocation,
+    makespan,
+    platform_latencies,
+)
+from .annealing import anneal, lp_polish, ml_allocation  # noqa: F401
+from .heuristic import proportional_allocation  # noqa: F401
+from .metrics import (  # noqa: F401
+    AccuracyModel,
+    CombinedModel,
+    LatencyModel,
+    fit_accuracy_model,
+    fit_latency_model,
+    relative_error,
+    wls,
+)
+from .milp import milp_allocation  # noqa: F401
+from . import pareto, synthetic  # noqa: F401

@@ -1,0 +1,125 @@
+"""The allocation problem (paper §3.2, §4.3.1).
+
+Allocating tau divisible tasks across mu platforms to minimise makespan:
+
+    minimise_{A in R+^{mu x tau}}  G_L(A, c)
+    subject to                     sum_i A[i, j] == 1  for every task j
+
+    G_L(A, c)  = max_i H_L(A, c)[i]                               (eq. 10)
+    H_L(A, c)  = (delta : c^2  o  A  +  gamma o ceil(A)) . 1
+
+where ``delta : c^2`` is the element-wise division of the delta coefficient
+matrix by the squared task accuracies (the *work* matrix W), and the
+``gamma o ceil(A)`` term charges each platform the per-task constant
+whenever any non-zero fraction of the task is allocated to it — the source
+of the problem's non-linearity.
+
+This module holds the problem container plus the reduction functions; the
+three solvers live in :mod:`repro.core.heuristic`, :mod:`repro.core.annealing`
+and :mod:`repro.core.milp`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "AllocationProblem",
+    "Allocation",
+    "platform_latencies",
+    "makespan",
+    "check_allocation",
+    "SUPPORT_ATOL",
+]
+
+# An allocation entry below this is treated as "not allocated" for the
+# purposes of the ceil() indicator. Solvers snap-to-zero below it.
+SUPPORT_ATOL = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationProblem:
+    """Work/constant matrices for one allocation instance.
+
+    delta : (mu, tau)  combined-model coefficients (eq. 9) per (platform, task)
+    gamma : (mu, tau)  per-(platform, task) constants
+    c     : (tau,)     required accuracies; W = delta / c**2
+    """
+
+    delta: np.ndarray
+    gamma: np.ndarray
+    c: np.ndarray
+
+    def __post_init__(self):
+        delta = np.asarray(self.delta, dtype=np.float64)
+        gamma = np.asarray(self.gamma, dtype=np.float64)
+        c = np.asarray(self.c, dtype=np.float64)
+        if delta.ndim != 2 or gamma.shape != delta.shape:
+            raise ValueError(f"delta/gamma must be matching 2-D: {delta.shape} vs {gamma.shape}")
+        if c.shape != (delta.shape[1],):
+            raise ValueError(f"c must be (tau,): {c.shape} vs tau={delta.shape[1]}")
+        if (delta < 0).any() or (gamma < 0).any() or (c <= 0).any():
+            raise ValueError("delta, gamma must be >= 0 and c > 0")
+        object.__setattr__(self, "delta", delta)
+        object.__setattr__(self, "gamma", gamma)
+        object.__setattr__(self, "c", c)
+
+    @property
+    def mu(self) -> int:
+        return self.delta.shape[0]
+
+    @property
+    def tau(self) -> int:
+        return self.delta.shape[1]
+
+    @property
+    def work(self) -> np.ndarray:
+        """W = delta : c^2 — latency of the *whole* task j on platform i,
+        excluding constants."""
+        return self.delta / (self.c * self.c)[None, :]
+
+    @property
+    def full_latency(self) -> np.ndarray:
+        """L = W + gamma — eq. 3's relative latency matrix (atomic view)."""
+        return self.work + self.gamma
+
+    @classmethod
+    def from_work(cls, work: np.ndarray, gamma: np.ndarray) -> "AllocationProblem":
+        """Build a problem directly from a work matrix (c folded in, c=1)."""
+        work = np.asarray(work, dtype=np.float64)
+        return cls(delta=work, gamma=gamma, c=np.ones(work.shape[1]))
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """A solver result: the allocation matrix plus solve metadata."""
+
+    A: np.ndarray
+    makespan: float
+    solver: str
+    solve_time: float = 0.0
+    optimal: bool = False
+    bound: float | None = None  # solver-reported lower bound (MILP dual)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def platform_latencies(A: np.ndarray, problem: AllocationProblem) -> np.ndarray:
+    """H_L(A, c): per-platform latency vector (eq. 10's inner reduction)."""
+    A = np.asarray(A, dtype=np.float64)
+    support = A > SUPPORT_ATOL
+    return (problem.work * A).sum(axis=1) + (problem.gamma * support).sum(axis=1)
+
+
+def makespan(A: np.ndarray, problem: AllocationProblem) -> float:
+    """G_L(A, c) = max_i H_L(A, c)[i] (eq. 10's outer reduction)."""
+    return float(platform_latencies(A, problem).max())
+
+
+def check_allocation(A: np.ndarray, problem: AllocationProblem, atol: float = 1e-6) -> None:
+    """Validate the eq. 10 constraints; raises AssertionError on violation."""
+    A = np.asarray(A)
+    assert A.shape == (problem.mu, problem.tau), (A.shape, problem.mu, problem.tau)
+    assert (A >= -atol).all(), "negative allocation"
+    col = A.sum(axis=0)
+    assert np.allclose(col, 1.0, atol=atol), f"column sums != 1 (max err {np.abs(col - 1).max():.2e})"

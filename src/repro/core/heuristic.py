@@ -1,0 +1,37 @@
+"""Proportional allocation heuristic (paper §4.3.2, eq. 11).
+
+Every task is split across all platforms with the *same* per-platform share,
+inversely proportional to the makespan each platform would see if it ran the
+entire workload alone:
+
+    A[i, j] = ( L_i * sum_o 1/L_o )**-1,   L = H_L(1, c)
+
+The heuristic is optimal when the gamma constants vanish and the work matrix
+is rank-1 (platform speed independent of task); when constants dominate it
+degrades badly because it charges *every* platform *every* task's constant —
+exactly the regime where the ML/MILP solvers win (paper §6.3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .allocation import Allocation, AllocationProblem, makespan, platform_latencies
+
+__all__ = ["proportional_allocation"]
+
+
+def proportional_allocation(problem: AllocationProblem) -> Allocation:
+    t0 = time.perf_counter()
+    ones = np.ones((problem.mu, problem.tau))
+    L = platform_latencies(ones, problem)  # L = H_L(1, c)
+    inv = 1.0 / L
+    shares = inv / inv.sum()  # shares[i] = (L_i * sum_o 1/L_o)^-1
+    A = np.repeat(shares[:, None], problem.tau, axis=1)
+    return Allocation(
+        A=A,
+        makespan=makespan(A, problem),
+        solver="heuristic",
+        solve_time=time.perf_counter() - t0,
+    )

@@ -1,0 +1,74 @@
+"""Multimetric Pareto surfaces via the epsilon-constraint method (§3.2.3).
+
+For the pricing domain the two metrics are makespan (optimised) and
+accuracy (constrained). The accuracy constraint is folded into the work
+matrix (W = delta / c**2), so sweeping the accuracy epsilon is simply
+re-solving the allocation with scaled c — each solve yields one point of
+the latency/accuracy trade-off curve (Figs 9 & 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .allocation import Allocation, AllocationProblem
+
+__all__ = ["ParetoPoint", "sweep", "platform_curves", "pareto_filter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoPoint:
+    accuracy: float          # CI size epsilon applied to every task
+    makespan: float
+    solver: str
+    solve_time: float
+    allocation: Allocation
+
+
+def sweep(
+    delta: np.ndarray,
+    gamma: np.ndarray,
+    accuracies: Sequence[float],
+    solver: Callable[[AllocationProblem], Allocation],
+) -> list[ParetoPoint]:
+    """epsilon-constraint sweep: one allocation solve per accuracy target."""
+    points = []
+    tau = delta.shape[1]
+    for c in accuracies:
+        problem = AllocationProblem(delta=delta, gamma=gamma, c=np.full(tau, float(c)))
+        alloc = solver(problem)
+        points.append(
+            ParetoPoint(accuracy=float(c), makespan=alloc.makespan,
+                        solver=alloc.solver, solve_time=alloc.solve_time,
+                        allocation=alloc)
+        )
+    return points
+
+
+def platform_curves(
+    delta: np.ndarray, gamma: np.ndarray, accuracies: Sequence[float]
+) -> np.ndarray:
+    """Fig 9: per-platform makespan of the *whole* workload vs accuracy.
+
+    Returns [mu, len(accuracies)] — platform i running every task alone:
+    sum_j delta[i,j]/c^2 + gamma[i,j]. At low accuracy (large c) gamma
+    (network) dominates and platforms order geographically; at high
+    accuracy compute dominates and they order by measured capability.
+    """
+    acc = np.asarray(accuracies, dtype=np.float64)
+    return (delta.sum(axis=1)[:, None] / (acc * acc)[None, :]
+            + gamma.sum(axis=1)[:, None])
+
+
+def pareto_filter(points: Sequence[tuple[float, float]]) -> list[tuple[float, float]]:
+    """Non-dominated subset of (accuracy, makespan) points (both minimised)."""
+    pts = sorted(points)
+    out: list[tuple[float, float]] = []
+    best = np.inf
+    for acc, mk in pts:
+        if mk < best:
+            out.append((acc, mk))
+            best = mk
+    return out

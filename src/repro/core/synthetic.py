@@ -1,0 +1,77 @@
+"""Braun-style synthetic task/platform generation (paper §6.1.1, Table 3).
+
+Procedure s(tau, mu, theta_tau, theta_mu, omega_tau, omega_mu, psi):
+
+ 1. baseline vector x (tau integers in [1, theta_tau]) and initial matrix Y
+    (mu x tau integers in [1, theta_mu]);
+ 2. delta[i, j] = x[j] * Y[i, j];
+ 3. consistency: sort the first floor(tau * omega_tau) columns (platform
+    ordering made consistent for those tasks) and the first
+    floor(mu * omega_mu) rows (task ordering made consistent on those
+    platforms);
+ 4. gamma: repeat 1-3 with fresh draws, scaled by psi (the constant-to-
+    coefficient ratio — the knob that controls how non-linear the
+    allocation problem is).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .allocation import AllocationProblem
+
+__all__ = ["SyntheticCase", "TABLE3_CASES", "generate", "generate_case"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticCase:
+    theta_mu: int
+    omega_mu: float
+    theta_tau: int
+    omega_tau: float
+
+
+#: Paper Table 3.
+TABLE3_CASES: dict[str, SyntheticCase] = {
+    "Hom-Con": SyntheticCase(theta_mu=10, omega_mu=1.0, theta_tau=100, omega_tau=1.0),
+    "Het-Con": SyntheticCase(theta_mu=100, omega_mu=1.0, theta_tau=3000, omega_tau=1.0),
+    "Het-Mix": SyntheticCase(theta_mu=100, omega_mu=0.5, theta_tau=3000, omega_tau=0.5),
+    "Het-Inc": SyntheticCase(theta_mu=100, omega_mu=0.0, theta_tau=3000, omega_tau=0.0),
+}
+
+
+def _base_matrix(rng: np.random.Generator, mu: int, tau: int,
+                 theta_mu: int, theta_tau: int,
+                 omega_mu: float, omega_tau: float) -> np.ndarray:
+    x = rng.integers(1, theta_tau + 1, size=tau)
+    Y = rng.integers(1, theta_mu + 1, size=(mu, tau))
+    M = (x[None, :] * Y).astype(np.float64)
+    n_cols = int(np.floor(tau * omega_tau))
+    if n_cols:
+        M[:, :n_cols] = np.sort(M[:, :n_cols], axis=0)
+    n_rows = int(np.floor(mu * omega_mu))
+    if n_rows:
+        M[:n_rows, :] = np.sort(M[:n_rows, :], axis=1)
+    return M
+
+
+def generate(
+    tau: int,
+    mu: int,
+    theta_tau: int,
+    theta_mu: int,
+    omega_tau: float,
+    omega_mu: float,
+    psi: float,
+    seed: int = 0,
+) -> AllocationProblem:
+    rng = np.random.default_rng(seed)
+    delta = _base_matrix(rng, mu, tau, theta_mu, theta_tau, omega_mu, omega_tau)
+    gamma = psi * _base_matrix(rng, mu, tau, theta_mu, theta_tau, omega_mu, omega_tau)
+    return AllocationProblem(delta=delta, gamma=gamma, c=np.ones(tau))
+
+
+def generate_case(case: str, tau: int, mu: int, psi: float, seed: int = 0) -> AllocationProblem:
+    p = TABLE3_CASES[case]
+    return generate(tau, mu, p.theta_tau, p.theta_mu, p.omega_tau, p.omega_mu, psi, seed)

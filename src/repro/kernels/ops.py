@@ -1,0 +1,26 @@
+"""jit'd public wrappers around the Pallas Monte Carlo kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.pricing.contracts import PricingTask
+from .mc_paths import mc_moments_kernel_call
+
+__all__ = ["mc_moments"]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def mc_moments(task: PricingTask, n_paths: int, seed: int = 0,
+               block_paths: int = 4096, interpret: bool = True):
+    """(sum payoff, sum payoff^2) over ``n_paths`` paths via the TPU kernel.
+
+    The per-block partials are reduced on-device; combined with
+    ``repro.pricing.mc._finalize`` this yields price + 95% CI.
+    """
+    partial = mc_moments_kernel_call(task, n_paths, seed,
+                                     block_paths=block_paths,
+                                     interpret=interpret)
+    return partial[:, 0].sum(), partial[:, 1].sum()

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Monte Carlo kernels.
+
+The oracle *is* the production jnp engine (repro.pricing.mc): both draw
+the identical Threefry stream per (task, path, step), so kernel-vs-oracle
+agreement is exact up to float32 summation order. Tests sweep shapes,
+payoff types and underlyings and assert allclose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pricing.contracts import PricingTask, payoff_from_stats
+from repro.pricing.mc import path_stats
+
+__all__ = ["mc_moments_ref", "mc_block_moments_ref"]
+
+
+def mc_moments_ref(task: PricingTask, n_paths: int, seed: int = 0):
+    """(sum payoff, sum payoff^2) — single flat reduction."""
+    s_t, avg, mn, mx = path_stats(task, n_paths, seed)
+    pay = payoff_from_stats(s_t, avg, mn, mx, task.option)
+    return pay.sum(), (pay * pay).sum()
+
+
+def mc_block_moments_ref(task: PricingTask, n_paths: int, seed: int,
+                         block_paths: int):
+    """Per-block (sum, sumsq) with the kernel's exact blocking — for
+    bitwise-closer comparisons of the partial outputs."""
+    blocks = n_paths // block_paths
+    s_t, avg, mn, mx = path_stats(task, n_paths, seed)
+    pay = payoff_from_stats(s_t, avg, mn, mx, task.option)
+    pay = pay.reshape(blocks, block_paths)
+    return jnp.stack([pay.sum(axis=1), (pay * pay).sum(axis=1)], axis=1)

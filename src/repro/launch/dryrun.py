@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, record memory/cost/collective artifacts.
+
+MUST be run as its own process (the first two lines above force 512 host
+placeholder devices before jax initialises — never set this in conftest
+or package __init__: smoke tests and benches should see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --no-probes
+    ... --seq-shard/--no-seq-shard --microbatches N   (hillclimb levers)
+
+Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one architecture id")
+    ap.add_argument("--shape", default=None, help="one shape name")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the (2,16,16) pod mesh instead of (16,16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probes", dest="probes", action="store_false")
+    ap.add_argument("--seq-shard", dest="seq_shard", action="store_true",
+                    default=True)
+    ap.add_argument("--no-seq-shard", dest="seq_shard", action="store_false")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for artifact files")
+    ap.add_argument("--moe-dispatch", default=None, choices=["scatter", "a2a", "a2a_sp"],
+                    help="MoE dispatch strategy (hillclimb lever)")
+    ap.add_argument("--remat", default=None, choices=["nothing", "dots"],
+                    help="activation checkpoint policy (hillclimb lever)")
+    ap.add_argument("--pad-kv-heads", type=int, default=None,
+                    help="pad n_kv_heads (e.g. to the model-axis size) so "
+                         "the KV cache shards by head instead of sequence")
+    args = ap.parse_args(argv)
+
+    import jax  # noqa: E402 — after XLA_FLAGS
+    assert jax.device_count() == 512, \
+        f"expected 512 placeholder devices, got {jax.device_count()}"
+
+    from repro.configs import ARCHS, cells_for, get_config
+    from repro.launch.lowering import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    if args.moe_dispatch:
+        from repro.models import moe
+        moe.DISPATCH_MODE = args.moe_dispatch
+    if args.remat:
+        from repro.models import common
+        common.REMAT_POLICY = args.remat
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(False, make_production_mesh()),
+                  (True, make_production_mesh(multi_pod=True))]
+    else:
+        meshes = [(args.multi_pod, make_production_mesh(multi_pod=args.multi_pod))]
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    failures = 0
+    for multi_pod, mesh in meshes:
+        mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch in archs:
+            cfg = get_config(arch)
+            if args.pad_kv_heads:
+                import dataclasses as _dc
+                cfg = _dc.replace(cfg, n_kv_heads=args.pad_kv_heads)
+            for shape in cells_for(cfg):
+                if args.shape and shape.name != args.shape:
+                    continue
+                t0 = time.time()
+                try:
+                    stats = lower_cell(arch, cfg, shape, mesh,
+                                       seq_shard=args.seq_shard,
+                                       with_probes=args.probes,
+                                       microbatches=args.microbatches,
+                                       q_chunk=args.q_chunk)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    from repro.launch.lowering import CellStats
+                    stats = CellStats(arch=arch, shape=shape.name,
+                                      mesh=mesh_name, kind=shape.kind,
+                                      ok=False,
+                                      error=f"{type(e).__name__}: {e}"[:2000])
+                dt = time.time() - t0
+                status = "OK " if stats.ok else "FAIL"
+                mem = stats.memory.get("temp_size_in_bytes", 0) / 2**30
+                arg = stats.memory.get("argument_size_in_bytes", 0) / 2**30
+                print(f"[{status}] {mesh_name:9s} {arch:22s} {shape.name:12s} "
+                      f"args={arg:7.2f}GiB temp={mem:7.2f}GiB "
+                      f"coll={stats.full_collective_bytes/2**20:9.1f}MiB "
+                      f"mb={stats.microbatches} {dt:6.1f}s "
+                      f"{stats.error[:120]}", flush=True)
+                failures += 0 if stats.ok else 1
+                tag = f"__{args.tag}" if args.tag else ""
+                path = os.path.join(outdir, f"{arch}__{shape.name}{tag}.json")
+                with open(path, "w") as f:
+                    json.dump(stats.to_json(), f, indent=1)
+    print(f"dry-run complete: {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

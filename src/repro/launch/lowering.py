@@ -1,0 +1,258 @@
+"""Cell lowering: (arch x shape x mesh) -> compiled artifacts + stats.
+
+This is the engine behind the multi-pod dry-run (launch/dryrun.py) and the
+roofline analysis. Everything is ShapeDtypeStruct-based: no arrays are
+ever materialised for the production configs.
+
+Per cell we compile
+  1. the FULL step (train_step / prefill / decode_step) under the target
+     mesh: proves shardings are coherent, gives memory_analysis (fits?) and
+     the post-SPMD HLO for the outside-the-scan collectives;
+  2. PROBES — single-layer (or single-chunk) functions under the same mesh
+     and shardings: exact per-layer FLOPs / bytes / collective bytes that
+     the roofline scales by the known multipliers (XLA cost analysis counts
+     a while-loop body once, so full-model numbers are NOT usable directly;
+     see repro.roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import rules_for
+from repro.models import build_model
+from repro.models.config import ModelConfig, Shape
+from repro.models.rwkv import CHUNK as RWKV_CHUNK
+from repro.optim.adamw import AdamW
+from repro.roofline.hlo import collective_bytes
+from repro.train.train_step import make_train_step
+
+__all__ = ["CellStats", "lower_cell", "pick_microbatches", "batch_structs"]
+
+ACT_BUDGET_BYTES = 2 << 30  # per-device saved-activation budget for grad-accum
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int, mesh: Mesh):
+    """ShapeDtypeStructs for one global batch (frontend stubs included)."""
+    rules = rules_for(mesh)
+    dp = rules.maybe(batch, "pod", "data")
+    out = {}
+    text = seq - cfg.frontend_len if cfg.family == "vlm" else seq
+    out["tokens"] = _sds((batch, text), jnp.int32, mesh, P(dp, None))
+    if cfg.family == "vlm":
+        out["vision"] = _sds((batch, cfg.frontend_len, cfg.d_model),
+                             jnp.float32, mesh, P(dp, None, None))
+    if cfg.family == "encdec":
+        out["audio"] = _sds((batch, cfg.frontend_len, cfg.d_model),
+                            jnp.float32, mesh, P(dp, None, None))
+    return out
+
+
+def pick_microbatches(cfg: ModelConfig, shape: Shape, rules) -> int:
+    """Grad-accum factor: keep saved layer-boundary activations under the
+    per-device budget. Saved state per microbatch ~= L x B_mb x S x D x 2B
+    sharded over dp (and model, with sequence parallelism)."""
+    dp = math.prod(rules.axis_sizes.get(a, 1) for a in ("pod", "data"))
+    sp = rules.axis_sizes.get("model", 1)
+    n_layers = cfg.n_layers + cfg.encoder_layers
+    per_mb = 2 * shape.global_batch * shape.seq_len * cfg.d_model * n_layers
+    per_mb /= dp * sp
+    mb = 1
+    while per_mb / mb > ACT_BUDGET_BYTES and mb < shape.global_batch:
+        mb *= 2
+    while shape.global_batch % mb or (shape.global_batch // mb) % dp:
+        mb //= 2  # keep microbatches divisible over the DP axes
+    return max(mb, 1)
+
+
+# --------------------------------------------------------------------------
+# per-cell lowering
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellStats:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    ok: bool
+    error: str = ""
+    microbatches: int = 1
+    # full-step artifacts (per device)
+    memory: dict = dataclasses.field(default_factory=dict)
+    cost: dict = dataclasses.field(default_factory=dict)
+    full_collective_bytes: int = 0
+    # probe artifacts: name -> {flops, bytes, coll_bytes, multiplier}
+    probes: dict = dataclasses.field(default_factory=dict)
+    # analytic
+    model_flops: float = 0.0
+    params_total: int = 0
+    params_active: int = 0
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def _mem_dict(compiled) -> dict:
+    m = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return {k: float(v) for k, v in c.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}
+
+
+def _compile(fn, args, mesh, static_argnums=(), donate_argnums=()):
+    with mesh:
+        lowered = jax.jit(fn, static_argnums=static_argnums,
+                          donate_argnums=donate_argnums).lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _probe_stats(fn, args, mesh, multiplier: float) -> dict:
+    _, compiled = _compile(fn, args, mesh)
+    return {
+        "flops": _cost_dict(compiled).get("flops", 0.0),
+        "bytes": _cost_dict(compiled).get("bytes accessed", 0.0),
+        "coll_bytes": collective_bytes(compiled.as_text()),
+        "multiplier": float(multiplier),
+    }
+
+
+def _abstract_params(model, mesh):
+    shapes, specs = model.abstract()
+    return {k: _sds(v.shape, v.dtype, mesh, specs[k])
+            for k, v in shapes.items()}, specs
+
+
+def _layer_param_structs(build_fn, mesh):
+    """Abstract single-layer params (no leading stack dim) + shardings.
+
+    The spec dict is a side channel of the builder, captured while
+    eval_shape traces the (allocation-free) init."""
+    captured: dict = {}
+
+    def capture():
+        params, specs = build_fn(jax.random.PRNGKey(0))
+        captured.update(specs)
+        return params
+
+    shapes = jax.eval_shape(capture)
+    return ({k: _sds(v.shape, v.dtype, mesh, captured[k])
+             for k, v in shapes.items()}, captured)
+
+
+def lower_cell(arch: str, cfg: ModelConfig, shape: Shape, mesh: Mesh, *,
+               seq_shard: bool = True, with_probes: bool = True,
+               microbatches: int | None = None,
+               q_chunk: int | None = None,
+               opt: AdamW | None = None,
+               collect_hlo: bool = False) -> CellStats:
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    stats = CellStats(arch=arch, shape=shape.name, mesh=mesh_name,
+                      kind=shape.kind, ok=False)
+    rules = rules_for(mesh)
+    model = build_model(cfg, rules=rules, seq_shard=seq_shard)
+    total, active = cfg.param_count()
+    stats.params_total, stats.params_active = total, active
+
+    if q_chunk is None:
+        q_chunk = 1024 if shape.seq_len > 8192 else None
+
+    try:
+        params_structs, specs = _abstract_params(model, mesh)
+        if shape.kind == "train":
+            mb = microbatches or pick_microbatches(cfg, shape, rules)
+            stats.microbatches = mb
+            opt = opt or AdamW()
+            opt_structs = jax.eval_shape(opt.init, params_structs)
+            opt_specs = opt.state_specs(specs)
+            opt_structs = jax.tree.map(
+                lambda v, s: _sds(v.shape, v.dtype, mesh, s),
+                opt_structs, opt_specs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            batch = batch_structs(cfg, shape.global_batch, shape.seq_len, mesh)
+            step = make_train_step(model, opt, microbatches=mb,
+                                   loss_kwargs={"q_chunk": q_chunk})
+            # donate params + opt state: in-place update, as in production
+            lowered, compiled = _compile(step, (params_structs, opt_structs,
+                                                batch), mesh,
+                                         donate_argnums=(0, 1))
+            # MODEL_FLOPS = 6 * N_active * D_tokens
+            stats.model_flops = 6.0 * active * shape.tokens
+        elif shape.kind == "prefill":
+            batch = batch_structs(cfg, shape.global_batch, shape.seq_len, mesh)
+            fn = lambda p, b: model.prefill(p, b, shape.seq_len)
+            lowered, compiled = _compile(fn, (params_structs, batch), mesh)
+            stats.model_flops = 2.0 * active * shape.tokens
+        else:  # decode
+            cache_structs = _cache_structs(model, shape, mesh)
+            tok = _sds((shape.global_batch, 1), jnp.int32, mesh,
+                       P(rules.maybe(shape.global_batch, "pod", "data"), None))
+            # donate the KV/state cache: decode updates it in place
+            lowered, compiled = _compile(model.decode_step,
+                                         (params_structs, cache_structs, tok),
+                                         mesh, donate_argnums=(1,))
+            stats.model_flops = 2.0 * active * shape.global_batch
+        stats.memory = _mem_dict(compiled)
+        stats.cost = _cost_dict(compiled)
+        hlo = compiled.as_text()
+        stats.full_collective_bytes = collective_bytes(hlo)
+        if collect_hlo:
+            stats.memory["hlo_text"] = hlo[:0]  # placeholder (large)
+        stats.ok = True
+    except Exception as e:  # noqa: BLE001 — dry-run failures are findings
+        stats.error = f"{type(e).__name__}: {e}"[:2000]
+        return stats
+
+    if with_probes:
+        try:
+            from repro.launch.probes import cell_probes
+            stats.probes = cell_probes(model, cfg, shape, mesh,
+                                       microbatches=stats.microbatches,
+                                       q_chunk=q_chunk)
+        except Exception as e:  # noqa: BLE001
+            stats.probes = {"error": f"{type(e).__name__}: {e}"[:2000]}
+    return stats
+
+
+def _cache_structs(model, shape: Shape, mesh: Mesh):
+    # NB: close over the (static) sizes — eval_shape would trace them.
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+    return jax.tree.map(
+        lambda v, s: _sds(v.shape, v.dtype, mesh, s),
+        cache_shapes, cache_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state — required because the dry-run must
+set XLA_FLAGS before the first jax initialisation.
+
+Mesh logical axes:
+    pod    — data parallelism across pods (slow DCN links; gradient
+             compression applies here)
+    data   — within-pod data parallelism + FSDP weight sharding
+    model  — tensor / expert / sequence parallelism (fast ICI)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models.common import Rules
+
+__all__ = ["make_production_mesh", "make_host_mesh", "rules_for",
+           "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
+
+SINGLE_POD_SHAPE = (16, 16)            # 256 chips (one v5e pod in this study)
+MULTI_POD_SHAPE = (2, 16, 16)          # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None) -> Mesh:
+    """Small mesh over whatever local devices exist (tests / examples)."""
+    devs = np.array(jax.devices())
+    n = data or len(devs)
+    return Mesh(devs[:n].reshape(n, 1), ("data", "model"))
+
+
+def rules_for(mesh: Mesh) -> Rules:
+    return Rules({name: size for name, size in mesh.shape.items()})

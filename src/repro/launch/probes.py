@@ -1,0 +1,264 @@
+"""Single-layer probe compilation for exact roofline accounting.
+
+XLA's cost analysis counts a while-loop (lax.scan) body ONCE, so the
+full-model numbers undercount by the layer / microbatch / chunk trip
+counts. Probes compile the *body* functions directly under the production
+mesh and shardings; the roofline multiplies by the known static trip
+counts:
+
+    train  : fwd+bwd(block) x L x microbatches  +  head(fwd+bwd)  +  opt
+    prefill: fwd(block) x L                      +  head(fwd, last pos)
+    decode : decode(block) x L                   +  head(fwd, 1 token)
+
+Per-family notes:
+  * rwkv    — the block probe covers ONE chunk; multiplier x= S/CHUNK
+  * hybrid  — the probe is one (rec, rec, attn) GROUP; multiplier is
+              n_groups + n_tail/len(pattern) (tail is rec-only, noted)
+  * encdec  — decoder block probe x L + encoder block probe x enc_layers
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import rules_for
+from repro.models.config import ModelConfig, Shape
+from repro.models.layers import cross_entropy
+from repro.models.rwkv import CHUNK as RWKV_CHUNK
+from repro.optim.adamw import AdamW
+
+__all__ = ["cell_probes"]
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _grad(fn, remat: bool = True):
+    """fwd+bwd probe of fn (cotangents of ones).
+
+    remat=True wraps fn in the same nothing-saveable checkpoint policy the
+    full training step uses, so the probe's FLOPs include the backward
+    recompute the real step pays (the useful-FLOPs ratio then honestly
+    reflects remat waste)."""
+    if remat:
+        from repro.models.common import remat_policy
+        fn = jax.checkpoint(fn, policy=remat_policy())
+
+    def probe(*args):
+        out, vjp = jax.vjp(fn, *args)
+        cot = jax.tree.map(jnp.ones_like, out)
+        return vjp(cot)
+
+    return probe
+
+
+def _compile_stats(fn, args, mesh, multiplier):
+    from repro.launch.lowering import _compile, _cost_dict
+    from repro.roofline.hlo import collective_bytes
+    _, compiled = _compile(fn, args, mesh)
+    c = _cost_dict(compiled)
+    return {"flops": c.get("flops", 0.0), "bytes": c.get("bytes accessed", 0.0),
+            "coll_bytes": collective_bytes(compiled.as_text()),
+            "multiplier": float(multiplier)}
+
+
+def _x_struct(cfg, b, s, mesh, act_spec, rules=None):
+    """Activation struct with a divisibility-sanitised version of act_spec
+    (decode cells have batch=1 / seq=1 dims that cannot be sharded)."""
+    if rules is not None:
+        entries = list(act_spec) + [None] * (3 - len(act_spec))
+        dims = []
+        for size, ax in zip((b, s, cfg.d_model), entries):
+            if ax is None:
+                dims.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            prod = 1
+            for a in axes:
+                prod *= rules.axis_sizes.get(a, 1)
+            dims.append(ax if size % prod == 0 else None)
+        act_spec = P(*dims)
+    return _sds((b, s, cfg.d_model), cfg.cdtype, mesh, act_spec)
+
+
+def _head_fn(model, cfg, labels_needed=True):
+    """embed + final norm + chunked CE (the non-layer compute)."""
+
+    def fn(embed, unembed, lnf, tokens):
+        from repro.models.layers import rmsnorm
+        x = embed[tokens].astype(cfg.cdtype)
+        x = rmsnorm(x, lnf, cfg.eps)
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        return cross_entropy(lambda l: l, x, unembed, labels, chunk=512)
+
+    return fn
+
+
+def cell_probes(model, cfg: ModelConfig, shape: Shape, mesh: Mesh, *,
+                microbatches: int = 1, q_chunk=None) -> dict:
+    from repro.launch.lowering import _layer_param_structs
+    rules = rules_for(mesh)
+    out: dict = {}
+    b_mb = shape.global_batch // microbatches if shape.kind == "train" \
+        else shape.global_batch
+    dp = rules.maybe(b_mb, "pod", "data")
+    s = shape.seq_len
+    act_spec = model.act_spec
+
+    # ---------------- block probes -----------------------------------
+    if cfg.family == "rwkv":
+        layer_structs, _ = _layer_param_structs(model._build_block(), mesh)
+        h, hd = model.n_heads, model.hd
+        mdl = rules.maybe(h, "model")
+        if shape.kind == "decode":
+            xc = _x_struct(cfg, b_mb, 1, mesh, act_spec, rules)
+            mult = cfg.n_layers
+        else:
+            xc = _x_struct(cfg, b_mb, RWKV_CHUNK, mesh, act_spec, rules)
+            mult = cfg.n_layers * (s // RWKV_CHUNK)
+        tprev = _sds((b_mb, cfg.d_model), cfg.cdtype, mesh, P(dp, None))
+        state = _sds((b_mb, h, hd, hd), jnp.float32, mesh, P(dp, mdl, None, None))
+        fn, _ = model.probe_block()
+        args = (layer_structs, xc, tprev, tprev, state)
+        if shape.kind == "train":
+            out["block"] = _compile_stats(_grad(fn), args, mesh,
+                                          mult * microbatches)
+        else:
+            out["block"] = _compile_stats(fn, args, mesh, mult)
+    elif cfg.family == "hybrid":
+        group_structs, _ = _layer_param_structs(model._build_group(), mesh)
+        pat = len(model.pattern)
+        mult = model.n_groups + model.n_tail / pat
+        if shape.kind == "decode":
+            cache_sh = jax.eval_shape(lambda: model._zero_group_cache(b_mb))
+            cache = jax.tree.map(
+                lambda v: _sds(v.shape, v.dtype, mesh,
+                               P(*( [dp] + [None] * (len(v.shape) - 1) ))
+                               if len(v.shape) > 1 else P(None)),
+                cache_sh, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            pos = _sds((), jnp.int32, mesh, P())
+            fn, _ = model.probe_block_decode()
+            x1 = _x_struct(cfg, b_mb, 1, mesh, act_spec, rules)
+            out["block"] = _compile_stats(fn, (group_structs, x1, cache, pos),
+                                          mesh, mult)
+        else:
+            fn, _ = model.probe_block(q_chunk=q_chunk)
+            x = _x_struct(cfg, b_mb, s, mesh, act_spec, rules)
+            if shape.kind == "train":
+                out["block"] = _compile_stats(_grad(fn), (group_structs, x),
+                                              mesh, mult * microbatches)
+            else:
+                out["block"] = _compile_stats(fn, (group_structs, x), mesh, mult)
+    elif cfg.family == "encdec":
+        dec_structs, _ = _layer_param_structs(model._build_dec_block(), mesh)
+        enc_structs, _ = _layer_param_structs(model._build_enc_block(), mesh)
+        kvh = cfg.n_kv_heads
+        kv_sh = rules.maybe(kvh, "model")
+        enc_kv = _sds((b_mb, cfg.frontend_len, kvh, cfg.hd), cfg.cdtype, mesh,
+                      P(dp, None, kv_sh, None))
+        if shape.kind == "decode":
+            fn, mult = model.probe_block_decode()
+            x1 = _x_struct(cfg, b_mb, 1, mesh, act_spec, rules)
+            kv = _sds((b_mb, s, kvh, cfg.hd), cfg.pdtype, mesh,
+                      P(dp, None, kv_sh, None))
+            pos = _sds((), jnp.int32, mesh, P())
+            out["block"] = _compile_stats(
+                fn, (dec_structs, x1, kv, kv, enc_kv, enc_kv, pos), mesh, mult)
+        else:
+            fn, mult = model.probe_block()
+            x = _x_struct(cfg, b_mb, s, mesh, act_spec, rules)
+            args = (dec_structs, x, enc_kv, enc_kv)
+            if shape.kind == "train":
+                out["block"] = _compile_stats(_grad(fn), args, mesh,
+                                              mult * microbatches)
+            else:
+                out["block"] = _compile_stats(fn, args, mesh, mult)
+            # encoder side
+            def enc_fn(layer_p, h):
+                from repro.models.layers import apply_attn, mlp, rmsnorm
+                hn = rmsnorm(h, layer_p["ln1"], cfg.eps)
+                k = jnp.einsum("bsd,dhk->bshk", hn, layer_p["attn/wk"])
+                v = jnp.einsum("bsd,dhk->bshk", hn, layer_p["attn/wv"])
+                a, _ = apply_attn(layer_p, cfg, hn,
+                                  positions=jnp.arange(h.shape[1]),
+                                  kv_override=(k, v), use_rope=False)
+                h = h + a
+                return h + mlp(layer_p, cfg, rmsnorm(h, layer_p["ln2"], cfg.eps))
+            xe = _x_struct(cfg, b_mb, cfg.frontend_len, mesh, act_spec, rules)
+            emult = cfg.encoder_layers * (microbatches if shape.kind == "train" else 1)
+            out["enc_block"] = _compile_stats(
+                _grad(enc_fn) if shape.kind == "train" else enc_fn,
+                (enc_structs, xe), mesh, emult)
+    else:  # dense / vlm / moe
+        layer_structs, _ = _layer_param_structs(model._build_block(), mesh)
+        if shape.kind == "decode":
+            fn, mult = model.probe_block_decode()
+            x1 = _x_struct(cfg, b_mb, 1, mesh, act_spec, rules)
+            kvh = cfg.n_kv_heads
+            kv_sh = rules.maybe(kvh, "model")
+            seq_sh = rules.maybe(s, "model") if kv_sh is None else None
+            kv = _sds((b_mb, s, kvh, cfg.hd), cfg.pdtype, mesh,
+                      P(dp, seq_sh, kv_sh, None))
+            pos = _sds((), jnp.int32, mesh, P())
+            out["block"] = _compile_stats(fn, (layer_structs, x1, kv, kv, pos),
+                                          mesh, mult)
+        else:
+            fn, mult = model.probe_block()
+            # vlm: frontend tokens + text tokens together span seq_len
+            x = _x_struct(cfg, b_mb, s, mesh, act_spec, rules)
+            if shape.kind == "train":
+                out["block"] = _compile_stats(_grad(fn), (layer_structs, x),
+                                              mesh, mult * microbatches)
+            else:
+                out["block"] = _compile_stats(fn, (layer_structs, x), mesh, mult)
+
+    # ---------------- head probe (embed + unembed + CE) ---------------
+    vs = rules.maybe(cfg.vocab, "model")
+    ds = rules.maybe(cfg.d_model, "data")
+    embed = _sds((cfg.vocab, cfg.d_model), cfg.pdtype, mesh, P(vs, ds))
+    unembed = _sds((cfg.d_model, cfg.vocab), cfg.pdtype, mesh, P(ds, vs))
+    lnf = _sds((cfg.d_model,), cfg.pdtype, mesh, P(None))
+    if shape.kind == "train":
+        text = s - cfg.frontend_len if cfg.family == "vlm" else s
+        toks = _sds((b_mb, text), jnp.int32, mesh, P(dp, None))
+        out["head"] = _compile_stats(_grad(_head_fn(model, cfg)),
+                                     (embed, unembed, lnf, toks), mesh,
+                                     microbatches)
+    else:
+        def head_inf(embed, unembed, lnf, x_last):
+            from repro.models.layers import rmsnorm
+            return (rmsnorm(x_last, lnf, cfg.eps) @ unembed).astype(jnp.float32)
+
+        x_last = _x_struct(cfg, b_mb, 1, mesh, act_spec, rules)
+        out["head"] = _compile_stats(head_inf, (embed, unembed, lnf, x_last),
+                                     mesh, 1)
+
+    # ---------------- optimizer probe ---------------------------------
+    if shape.kind == "train":
+        opt = AdamW()
+        params_structs, _ = _abstract(model, mesh)
+        opt_structs = jax.eval_shape(opt.init, params_structs)
+        opt_specs = opt.state_specs(_abstract(model, mesh)[1])
+        opt_structs = jax.tree.map(
+            lambda v, sp: _sds(v.shape, v.dtype, mesh, sp),
+            opt_structs, opt_specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        grads = jax.tree.map(lambda v: _sds(v.shape, jnp.float32, mesh,
+                                            v.sharding.spec), params_structs)
+
+        def opt_fn(g, st, p):
+            return opt.update(g, st, p)
+
+        out["opt"] = _compile_stats(opt_fn, (grads, opt_structs,
+                                             params_structs), mesh, 1)
+    return out
+
+
+def _abstract(model, mesh):
+    shapes, specs = model.abstract()
+    return ({k: _sds(v.shape, v.dtype, mesh, specs[k])
+             for k, v in shapes.items()}, specs)

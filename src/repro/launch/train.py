@@ -1,0 +1,111 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen25_3b --smoke \
+        --steps 300 --batch 8 --seq 128
+
+Fault tolerance in the loop:
+  * async sharded checkpoints every --ckpt-every steps (atomic publish);
+  * on start, resumes from the newest complete checkpoint — the data
+    pipeline is a pure function of step, so restart is exact;
+  * --preempt-at N simulates a hard kill at step N (exercised in tests);
+  * per-step wall-clock is fed to an online latency model (the paper's
+    eq. 7 populated live) whose drift is the straggler alarm: a step
+    slower than model + 6 sigma re-fits and reports.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def main(argv=None, cfg=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen25_3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--preempt-at", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.checkpoint.checkpoint import Checkpointer
+    from repro.configs import get_config
+    from repro.core.metrics import fit_latency_model
+    from repro.data.pipeline import batch_for
+    from repro.models import build_model
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.train.train_step import make_train_step
+
+    if cfg is None:
+        cfg = get_config(args.arch)
+        if args.smoke:
+            cfg = cfg.smoke()
+    model = build_model(cfg)
+    opt = AdamW(lr=cosine_schedule(args.lr, args.warmup, args.steps))
+    step_fn = jax.jit(make_train_step(model, opt,
+                                      microbatches=args.microbatches))
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt_state = opt.init(params)
+    start_step = 0
+
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = Checkpointer(args.ckpt_dir)
+        latest = ckpt.latest_step()
+        if latest is not None:
+            restored = ckpt.restore(latest, {"params": params, "opt": opt_state})
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = latest
+            print(f"resumed from checkpoint step {latest}")
+
+    times: list[tuple[int, float]] = []
+    for step in range(start_step, args.steps):
+        if args.preempt_at and step == args.preempt_at:
+            print(f"simulated preemption at step {step}")
+            if ckpt:
+                ckpt.wait()
+            os._exit(42)  # hard kill: no cleanup, like a real preemption
+        batch = batch_for(cfg, args.batch, args.seq, step=step, seed=args.seed)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        metrics["loss"].block_until_ready()
+        dt = time.perf_counter() - t0
+        times.append((args.batch * args.seq, dt))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:7.1f} ms")
+        # online latency model (paper eq. 7) as a straggler detector
+        if len(times) >= 8 and len(times) % 16 == 0:
+            n, t = np.array(times[2:]).T  # drop compile steps
+            lm = fit_latency_model(n, t)
+            resid = t - lm(n)
+            if resid[-1] > 6 * (resid.std() + 1e-9):
+                print(f"straggler alarm: step latency {t[-1]*1e3:.1f} ms vs "
+                      f"model {lm(n[-1])*1e3:.1f} ms — refit & rebalance")
+        # label = the NEXT step to run: params here are post-`step`,
+        # so a resume must not re-execute this step's batch
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state},
+                  blocking=True)
+    print("training complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,4 @@
+"""repro.models — the 10 assigned architectures as composable JAX modules."""
+from .api import build_model  # noqa: F401
+from .config import ModelConfig, SHAPES, Shape  # noqa: F401
+from .common import Rules  # noqa: F401

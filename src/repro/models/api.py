@@ -1,0 +1,30 @@
+"""Model factory: family -> implementation class."""
+from __future__ import annotations
+
+from .common import Rules
+from .config import ModelConfig
+from .griffin import GriffinModel
+from .moe import MoEModel
+from .rwkv import RWKVModel
+from .transformer import DenseModel
+from .whisper import WhisperModel
+
+__all__ = ["build_model"]
+
+_FAMILIES = {
+    "dense": DenseModel,
+    "vlm": DenseModel,
+    "moe": MoEModel,
+    "rwkv": RWKVModel,
+    "hybrid": GriffinModel,
+    "encdec": WhisperModel,
+}
+
+
+def build_model(cfg: ModelConfig, rules: Rules | None = None,
+                seq_shard: bool = True):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}") from None
+    return cls(cfg, rules=rules, seq_shard=seq_shard)

@@ -1,0 +1,152 @@
+"""Model configuration for the 10 assigned architectures.
+
+One frozen dataclass covers every family; family-specific fields are
+ignored where inapplicable. Exact full-size configs live in
+``repro.configs.<arch>``; reduced smoke configs are derived with
+``ModelConfig.smoke()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "Shape", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str              # dense | moe | rwkv | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qkv_bias: bool = False           # qwen2.5
+    mlp_variant: str = "swiglu"      # swiglu | gelu
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    dense_residual: bool = False     # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+    # --- hybrid (recurrentgemma / griffin) ---
+    local_window: int = 2048
+    d_rnn: int | None = None
+    hybrid_pattern: tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    # --- enc-dec / modality frontends (stubs provide embeddings) ---
+    encoder_layers: int = 0
+    frontend_len: int = 0            # stub frontend tokens (vision patches / audio frames)
+    # --- numerics ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    rope_theta: float = 10_000.0
+    eps: float = 1e-5
+    # --- capability flags ---
+    subquadratic: bool = False       # supports long_500k decode
+    has_decoder: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def rnn_width(self) -> int:
+        return self.d_rnn if self.d_rnn is not None else self.d_model
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def smoke(self, **over) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2 if not self.hybrid_pattern else len(self.hybrid_pattern)),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            n_experts=min(self.n_experts, 8),
+            top_k=min(self.top_k, 2),
+            local_window=32,
+            d_rnn=64 if self.d_rnn is not None else None,
+            encoder_layers=min(self.encoder_layers, 2),
+            frontend_len=min(self.frontend_len, 8),
+            param_dtype="float32",
+            compute_dtype="float32",
+            name=self.name + "-smoke",
+        )
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+    # ---------------- analytic parameter counts (for MODEL_FLOPS) ----------
+
+    def param_count(self) -> tuple[int, int]:
+        """(total params N, active params N_active) — embeddings excluded
+        from the FLOP-relevant count per the 6ND convention's usual usage,
+        but unembed matmul is counted separately in roofline."""
+        d, hd = self.d_model, self.hd
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.mlp_variant == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        total = active = 0
+        n_dec = self.n_layers
+        if self.family == "moe":
+            moe = self.n_experts * mlp
+            act_moe = self.top_k * mlp
+            dense_part = mlp if self.dense_residual else 0
+            per_layer_total = attn + moe + dense_part
+            per_layer_active = attn + act_moe + dense_part
+            total += n_dec * per_layer_total
+            active += n_dec * per_layer_active
+        elif self.family == "rwkv":
+            # time-mix ~ 4 d^2 (+ small loras), channel-mix ~ 2*d*d_ff
+            per = 5 * d * d + 2 * d * self.d_ff
+            total += n_dec * per
+            active += n_dec * per
+        elif self.family == "hybrid":
+            pat = self.hybrid_pattern or ("rec",)
+            n_rec = sum(1 for _ in range(n_dec) if pat[_ % len(pat)] == "rec")
+            n_att = n_dec - n_rec
+            rec = 3 * d * self.rnn_width + self.rnn_width * d  # in/gate/out + conv
+            per_att = attn
+            total += n_rec * (rec + mlp) + n_att * (per_att + mlp)
+            active = total
+        else:  # dense / vlm / encdec
+            per = attn + mlp
+            total += (n_dec + self.encoder_layers) * per
+            if self.encoder_layers:  # cross-attention in decoder
+                total += n_dec * (d * self.n_heads * hd * 2 + d * self.n_kv_heads * hd * 2)
+            active = total
+        return total, active
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    """One assigned input-shape cell."""
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k":    Shape("train_4k", "train", 4_096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  Shape("decode_32k", "decode", 32_768, 128),
+    "long_500k":   Shape("long_500k", "decode", 524_288, 1),
+}

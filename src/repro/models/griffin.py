@@ -1,0 +1,432 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks +
+local (sliding-window) MQA attention, interleaved 1:2 (rec, rec, attn).
+
+TPU adaptation:
+  * the RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t runs as a
+    ``jax.lax.associative_scan`` — log-depth, static HLO (exact FLOP
+    accounting, no while loop), MXU-free VPU work;
+  * sliding-window attention uses the banded q-chunk path in
+    repro.models.layers (FLOPs scale with S*W, not S^2);
+  * decode keeps an O(W) ring-buffer KV cache and an O(1) recurrent
+    state, which is what makes the long_500k cell *runnable* for this
+    architecture (cache size independent of sequence length).
+
+Layers are scanned in (rec, rec, attn) triples (12 for the 38-layer 9B)
+plus a scanned tail of leftover rec layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamBuilder, Rules, flat_get, stack_init, shard_act, remat_policy
+from .config import ModelConfig
+from .layers import (apply_attn, attention, cross_entropy, init_attn,
+                     init_mlp, init_norm, mlp, rmsnorm, rope)
+
+__all__ = ["GriffinModel", "rg_lru_scan"]
+
+CONV_W = 4
+C_SCALE = 8.0  # the paper's fixed 'c' in a_t = exp(-c * softplus(Lambda) * r_t)
+SCAN_CHUNK = 4096  # unrolled seq-chunk size for the associative scan
+
+
+def rg_lru_scan(a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = a_t * h_{t-1} + bx_t with h_0 seeded by ``h0``.
+
+    a, bx: [B, S, N]; h0: [B, N]. Associative scan over S (log-depth).
+    """
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+class GriffinModel:
+    def __init__(self, cfg: ModelConfig, rules: Rules | None = None,
+                 seq_shard: bool = True):
+        self.cfg = cfg
+        self.rules = rules or Rules({})
+        mdl = self.rules.present("model")
+        self.act_spec = P(self.rules.dp() or None,
+                          mdl[0] if (seq_shard and mdl) else None, None)
+        pat = cfg.hybrid_pattern or ("rec", "rec", "attn")
+        self.pattern = pat
+        self.n_groups = cfg.n_layers // len(pat)
+        self.n_tail = cfg.n_layers - self.n_groups * len(pat)
+        assert all(pat[i % len(pat)] == "rec" for i in range(self.n_tail)), \
+            "tail layers must be recurrent for uniform stacking"
+
+    # ------------------------------------------------------------- params
+    def _init_rec(self, b: ParamBuilder, prefix: str):
+        cfg, rules = self.cfg, self.rules
+        d, n = cfg.d_model, cfg.rnn_width
+        dp, nr = rules.maybe(d, "data"), rules.maybe(n, "model")
+        init_norm(b, f"{prefix}/ln", d)
+        b.normal(f"{prefix}/w_x", (d, n), P(dp, nr))
+        b.normal(f"{prefix}/w_gate", (d, n), P(dp, nr))
+        b.normal(f"{prefix}/conv_w", (CONV_W, n), P(None, nr),
+                 scale=1.0 / math.sqrt(CONV_W))
+        b.zeros(f"{prefix}/conv_b", (n,), P(nr))
+        # RG-LRU gates + Lambda
+        b.normal(f"{prefix}/w_ra", (n, n), P(nr, None))
+        b.zeros(f"{prefix}/b_ra", (n,), P(nr))
+        b.normal(f"{prefix}/w_ix", (n, n), P(nr, None))
+        b.zeros(f"{prefix}/b_ix", (n,), P(nr))
+        b.const(f"{prefix}/lam", jnp.full((n,), 0.7), P(nr))
+        b.normal(f"{prefix}/w_out", (n, d), P(nr, dp))
+        init_norm(b, f"{prefix}/ln_mlp", d)
+        init_mlp(b, cfg, rules, prefix=f"{prefix}/mlp")
+
+    def _init_attn_layer(self, b: ParamBuilder, prefix: str):
+        cfg, rules = self.cfg, self.rules
+        init_norm(b, f"{prefix}/ln", cfg.d_model)
+        init_attn(b, cfg, rules, prefix=f"{prefix}/attn")
+        init_norm(b, f"{prefix}/ln_mlp", cfg.d_model)
+        init_mlp(b, cfg, rules, prefix=f"{prefix}/mlp")
+
+    def _build_group(self):
+        def build(key):
+            b = ParamBuilder(key, self.cfg.pdtype)
+            for i, kind in enumerate(self.pattern):
+                if kind == "rec":
+                    self._init_rec(b, f"l{i}")
+                else:
+                    self._init_attn_layer(b, f"l{i}")
+            return b.params, b.specs
+        return build
+
+    def _build_tail(self):
+        def build(key):
+            b = ParamBuilder(key, self.cfg.pdtype)
+            self._init_rec(b, "rec")
+            return b.params, b.specs
+        return build
+
+    def init(self, key):
+        cfg = self.cfg
+        kg, kt, ke = jax.random.split(key, 3)
+        params, specs = stack_init(self._build_group(), kg, self.n_groups)
+        params = {f"groups/{k}": v for k, v in params.items()}
+        specs = {f"groups/{k}": v for k, v in specs.items()}
+        if self.n_tail:
+            tp, ts = stack_init(self._build_tail(), kt, self.n_tail)
+            params.update({f"tail/{k}": v for k, v in tp.items()})
+            specs.update({f"tail/{k}": v for k, v in ts.items()})
+        b = ParamBuilder(ke, cfg.pdtype)
+        vs = self.rules.maybe(cfg.vocab, "model")
+        ds = self.rules.maybe(cfg.d_model, "data")
+        b.normal("embed", (cfg.vocab, cfg.d_model), P(vs, ds), scale=1.0)
+        b.normal("unembed", (cfg.d_model, cfg.vocab), P(ds, vs))
+        init_norm(b, "ln_f", cfg.d_model)
+        params.update(b.params)
+        specs.update(b.specs)
+        self._specs = specs
+        return params
+
+    def abstract(self, key=None):
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return shapes, dict(self._specs)
+
+    # --------------------------------------------------------- rec layer
+    def _rec_layer(self, p, prefix, x, carry, decode: bool):
+        """carry = (conv_buf [B, CONV_W-1, N], h [B, N]) or None (train)."""
+        cfg = self.cfg
+        xn = rmsnorm(x, p[f"{prefix}/ln"], cfg.eps)
+        u = xn @ p[f"{prefix}/w_x"]
+        gate = jax.nn.gelu(xn @ p[f"{prefix}/w_gate"])
+        # causal depthwise conv, width 4
+        if carry is None:
+            hist = jnp.zeros((x.shape[0], CONV_W - 1, u.shape[-1]), u.dtype)
+        else:
+            hist = carry[0]
+        ext = jnp.concatenate([hist, u], axis=1)
+        conv = sum(ext[:, CONV_W - 1 - j: ext.shape[1] - j] *
+                   p[f"{prefix}/conv_w"][CONV_W - 1 - j]
+                   for j in range(CONV_W))
+        conv = conv + p[f"{prefix}/conv_b"]
+        new_hist = ext[:, -(CONV_W - 1):]
+        # RG-LRU
+        c32 = conv.astype(jnp.float32)
+        r = jax.nn.sigmoid(c32 @ p[f"{prefix}/w_ra"].astype(jnp.float32)
+                           + p[f"{prefix}/b_ra"].astype(jnp.float32))
+        i = jax.nn.sigmoid(c32 @ p[f"{prefix}/w_ix"].astype(jnp.float32)
+                           + p[f"{prefix}/b_ix"].astype(jnp.float32))
+        log_a = -C_SCALE * jax.nn.softplus(p[f"{prefix}/lam"].astype(jnp.float32)) * r
+        a = jnp.exp(log_a)
+        bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * c32)
+        h0 = (jnp.zeros_like(bx[:, 0]) if carry is None
+              else carry[1].astype(jnp.float32))
+        if decode:
+            h = (a * h0[:, None] + bx)           # single step (S == 1)
+        elif a.shape[1] > SCAN_CHUNK:
+            # python-unrolled sequence chunks: bounds the associative-scan
+            # working set (levels x [B, chunk, N] f32) at long prefill
+            # lengths while keeping the HLO static (exact FLOP counting).
+            hs = []
+            hc = h0
+            for c0 in range(0, a.shape[1], SCAN_CHUNK):
+                sl = slice(c0, c0 + SCAN_CHUNK)
+                hch = rg_lru_scan(a[:, sl], bx[:, sl], hc)
+                hc = hch[:, -1]
+                hs.append(hch)
+            h = jnp.concatenate(hs, axis=1)
+        else:
+            h = rg_lru_scan(a, bx, h0)
+        new_carry = (new_hist, h[:, -1].astype(cfg.cdtype))
+        y = (h.astype(cfg.cdtype) * gate) @ p[f"{prefix}/w_out"]
+        x = shard_act(x + y, self.act_spec, self.rules)
+        x = x + mlp(p, cfg, rmsnorm(x, p[f"{prefix}/ln_mlp"], cfg.eps),
+                    prefix=f"{prefix}/mlp")
+        return shard_act(x, self.act_spec, self.rules), new_carry
+
+    # -------------------------------------------------------- attn layer
+    def _attn_layer_train(self, p, prefix, x, q_chunk, unroll=False):
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])
+        h, _ = apply_attn(p, cfg, rmsnorm(x, p[f"{prefix}/ln"], cfg.eps),
+                          positions=positions, window=cfg.local_window,
+                          q_chunk=q_chunk, prefix=f"{prefix}/attn",
+                          unroll=unroll)
+        x = shard_act(x + h, self.act_spec, self.rules)
+        x = x + mlp(p, cfg, rmsnorm(x, p[f"{prefix}/ln_mlp"], cfg.eps),
+                    prefix=f"{prefix}/mlp")
+        return shard_act(x, self.act_spec, self.rules)
+
+    def _attn_layer_ring(self, p, prefix, x, ring, pos):
+        """Decode with an O(window) ring-buffer cache.
+
+        ring = (k [B, W, KVH, hd], v, slot_pos [W] int32).
+        """
+        cfg = self.cfg
+        k_r, v_r, slot_pos = ring
+        w = k_r.shape[1]
+        xn = rmsnorm(x, p[f"{prefix}/ln"], cfg.eps)
+        pr = f"{prefix}/attn"
+        q = jnp.einsum("bsd,dhk->bshk", xn, p[f"{pr}/wq"])
+        k = jnp.einsum("bsd,dhk->bshk", xn, p[f"{pr}/wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xn, p[f"{pr}/wv"])
+        posn = pos + jnp.arange(1)
+        q = rope(q, posn, cfg.rope_theta)
+        k = rope(k, posn, cfg.rope_theta)           # absolute-position rope
+        slot = pos % w
+        k_r = jax.lax.dynamic_update_slice(k_r, k.astype(k_r.dtype), (0, slot, 0, 0))
+        v_r = jax.lax.dynamic_update_slice(v_r, v.astype(v_r.dtype), (0, slot, 0, 0))
+        slot_pos = jax.lax.dynamic_update_slice(slot_pos, pos[None], (slot,))
+        # manual masked attention over the ring
+        b, _, hh, hd = q.shape
+        kvh = k_r.shape[2]
+        qg = q.reshape(b, 1, kvh, hh // kvh, hd)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_r,
+                            preferred_element_type=jnp.float32)
+        logits = logits / math.sqrt(hd)
+        valid = (slot_pos <= pos) & (slot_pos > pos - w) & (slot_pos >= 0)
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v_r.dtype), v_r)
+        o = o.reshape(b, 1, hh, hd)
+        y = jnp.einsum("bshk,hkd->bsd", o, p[f"{pr}/wo"])
+        x = shard_act(x + y, self.act_spec, self.rules)
+        x = x + mlp(p, cfg, rmsnorm(x, p[f"{prefix}/ln_mlp"], cfg.eps),
+                    prefix=f"{prefix}/mlp")
+        return shard_act(x, self.act_spec, self.rules), (k_r, v_r, slot_pos)
+
+    # ------------------------------------------------------------ forward
+    def _group_train(self, p, x, q_chunk, unroll=False):
+        for i, kind in enumerate(self.pattern):
+            if kind == "rec":
+                x, _ = self._rec_layer(p, f"l{i}", x, None, decode=False)
+            else:
+                x = self._attn_layer_train(p, f"l{i}", x, q_chunk, unroll)
+        return x
+
+    def hidden_states(self, params, batch, q_chunk=None):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+        x = shard_act(x, self.act_spec, self.rules)
+        groups = flat_get(params, "groups")
+
+        def body(h, gp):
+            return self._group_train(gp, h, q_chunk), None
+
+        body = jax.checkpoint(body, policy=remat_policy())
+        x, _ = jax.lax.scan(body, x, groups)
+        if self.n_tail:
+            tail = flat_get(params, "tail")
+
+            def tbody(h, tp):
+                h, _ = self._rec_layer(tp, "rec", h, None, decode=False)
+                return h, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(
+                tbody, policy=remat_policy()), x, tail)
+        return x
+
+    def loss(self, params, batch, q_chunk=None, loss_chunk=512):
+        cfg = self.cfg
+        x = self.hidden_states(params, batch, q_chunk=q_chunk)
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        return cross_entropy(lambda l: l, x, params["unembed"], labels,
+                             mask=mask, chunk=loss_chunk)
+
+    # ------------------------------------------------------------ serving
+    def _zero_group_cache(self, bsz):
+        cfg = self.cfg
+        w = cfg.local_window
+        n = cfg.rnn_width
+        rec = lambda: (jnp.zeros((bsz, CONV_W - 1, n), cfg.cdtype),
+                       jnp.zeros((bsz, n), cfg.cdtype))
+        out = {}
+        for i, kind in enumerate(self.pattern):
+            if kind == "rec":
+                out[f"l{i}"] = rec()
+            else:
+                out[f"l{i}"] = (
+                    jnp.zeros((bsz, w, cfg.n_kv_heads, cfg.hd), cfg.pdtype),
+                    jnp.zeros((bsz, w, cfg.n_kv_heads, cfg.hd), cfg.pdtype),
+                    jnp.full((w,), -10**9, jnp.int32),
+                )
+        return out
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        g = self._zero_group_cache(batch_size)
+        stack = lambda tree: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape).copy(), tree)
+        cache = {"groups": stack(g), "pos": jnp.asarray(0, jnp.int32)}
+        if self.n_tail:
+            rec = self._zero_group_cache(batch_size)["l0"]
+            cache["tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_tail,) + a.shape).copy(), rec)
+        return cache
+
+    def cache_specs(self, batch_size: int, max_seq: int):
+        dp = self.rules.maybe(batch_size, "pod", "data")
+        rec_spec = (P(None, dp, None, None), P(None, dp, None))
+        out = {}
+        for i, kind in enumerate(self.pattern):
+            if kind == "rec":
+                out[f"l{i}"] = rec_spec
+            else:
+                out[f"l{i}"] = (P(None, dp, None, None, None),
+                                P(None, dp, None, None, None), P(None, None))
+        specs = {"groups": out, "pos": P()}
+        if self.n_tail:
+            specs["tail"] = rec_spec
+        return specs
+
+    def prefill(self, params, batch, max_seq: int, q_chunk=None):
+        """Forward over the prompt, then rebuild decode caches from the
+        final window/state (per-layer python loop inside the group scan)."""
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+        x = shard_act(x, self.act_spec, self.rules)
+        s = x.shape[1]
+        w = cfg.local_window
+        groups = flat_get(params, "groups")
+
+        def body(h, gp):
+            caches = {}
+            for i, kind in enumerate(self.pattern):
+                if kind == "rec":
+                    h2, carry = self._rec_layer(gp, f"l{i}", h, None, decode=False)
+                    # rebuild conv history from the last CONV_W-1 inputs is
+                    # already inside carry; keep it
+                    caches[f"l{i}"] = carry
+                    h = h2
+                else:
+                    # run windowed attention, then build the ring buffer
+                    xn = rmsnorm(h, gp[f"l{i}/ln"], cfg.eps)
+                    pr = f"l{i}/attn"
+                    positions = jnp.arange(s)
+                    k = rope(jnp.einsum("bsd,dhk->bshk", xn, gp[f"{pr}/wk"]),
+                             positions, cfg.rope_theta)
+                    v = jnp.einsum("bsd,dhk->bshk", xn, gp[f"{pr}/wv"])
+                    h = self._attn_layer_train(gp, f"l{i}", h, q_chunk)
+                    take = min(s, w)
+                    kk, vv = k[:, -take:], v[:, -take:]
+                    pos_taken = jnp.arange(s - take, s)
+                    slots = pos_taken % w
+                    k_r = jnp.zeros((h.shape[0], w, cfg.n_kv_heads, cfg.hd),
+                                    cfg.pdtype).at[:, slots].set(kk.astype(cfg.pdtype))
+                    v_r = jnp.zeros_like(k_r).at[:, slots].set(vv.astype(cfg.pdtype))
+                    slot_pos = jnp.full((w,), -10**9, jnp.int32).at[slots].set(pos_taken)
+                    caches[f"l{i}"] = (k_r, v_r, slot_pos)
+            return h, caches
+
+        x, gcaches = jax.lax.scan(body, x, groups)
+        cache = {"groups": gcaches, "pos": jnp.asarray(s, jnp.int32)}
+        if self.n_tail:
+            tail = flat_get(params, "tail")
+
+            def tbody(h, tp):
+                h, carry = self._rec_layer(tp, "rec", h, None, decode=False)
+                return h, carry
+
+            x, tcaches = jax.lax.scan(tbody, x, tail)
+            cache["tail"] = tcaches
+        x = rmsnorm(x[:, -1:], params["ln_f"], cfg.eps)
+        return cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.cdtype)
+        pos = cache["pos"]
+        groups = flat_get(params, "groups")
+
+        def body(h, xs):
+            gp, gc = xs
+            new_c = {}
+            for i, kind in enumerate(self.pattern):
+                if kind == "rec":
+                    h, new_c[f"l{i}"] = self._rec_layer(gp, f"l{i}", h,
+                                                        gc[f"l{i}"], decode=True)
+                else:
+                    h, new_c[f"l{i}"] = self._attn_layer_ring(gp, f"l{i}", h,
+                                                              gc[f"l{i}"], pos)
+            return h, new_c
+
+        x, gcaches = jax.lax.scan(body, x, (groups, cache["groups"]))
+        new_cache = {"groups": gcaches, "pos": pos + 1}
+        if self.n_tail:
+            tail = flat_get(params, "tail")
+
+            def tbody(h, xs):
+                tp, tc = xs
+                h, carry = self._rec_layer(tp, "rec", h, tc, decode=True)
+                return h, carry
+
+            x, tcaches = jax.lax.scan(tbody, x, (tail, cache["tail"]))
+            new_cache["tail"] = tcaches
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        return new_cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    # ------------------------------------------------------------- probes
+    def probe_block(self, q_chunk=None):
+        def fn(group_p, x):
+            # unroll=True: probes need static banded HLO for exact costs
+            return self._group_train(group_p, x, q_chunk=q_chunk, unroll=True)
+        return fn, self.n_groups  # tail folded into the multiplier
+
+    def probe_block_decode(self):
+        def fn(group_p, x, gc, pos):
+            new_c = {}
+            h = x
+            for i, kind in enumerate(self.pattern):
+                if kind == "rec":
+                    h, new_c[f"l{i}"] = self._rec_layer(group_p, f"l{i}", h,
+                                                        gc[f"l{i}"], decode=True)
+                else:
+                    h, new_c[f"l{i}"] = self._attn_layer_ring(group_p, f"l{i}",
+                                                              h, gc[f"l{i}"], pos)
+            return h, new_c
+        return fn, self.n_groups

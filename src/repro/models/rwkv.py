@@ -1,0 +1,293 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) — arXiv:2404.05892.
+
+TPU adaptation: the sequential WKV recurrence is evaluated in *chunked
+parallel* form (the flash-linear-attention factorisation): within a chunk
+of C tokens the interaction is two small matmuls plus a state term —
+MXU-friendly dense algebra — and the recurrent state is carried across
+chunks with a lax.scan. Decode uses the exact O(1) recurrence.
+
+Stability: the data-dependent decay w_t = exp(-exp(...)) is clamped to
+log w >= -8 and the chunk factorisation is computed with a per-channel
+exponent shift of half the chunk's total log-decay, bounding every factor
+by e^(C*8/2); with C=16 that is e^64, inside float32 range.
+
+WKV recurrence (per head; S is the [d_k, d_v] state):
+    o_t = r_t . (S_{t-1} + (u o k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamBuilder, Rules, flat_get, stack_init, shard_act, remat_policy
+from .config import ModelConfig
+from .layers import cross_entropy, init_norm, rmsnorm
+
+__all__ = ["RWKVModel", "CHUNK"]
+
+CHUNK = 16
+LOGW_MIN = -8.0
+LORA_R = 64
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _head_norm(o, w, eps):
+    """GroupNorm-per-head stand-in: RMS-normalise each head's d_v lanes."""
+    o32 = o.astype(jnp.float32)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, axis=-1, keepdims=True) + eps)
+    return (o32 * w.astype(jnp.float32)).astype(o.dtype)
+
+
+def _chunk_wkv(r, k, v, logw, u, state):
+    """One chunk. r,k,v,logw: [B,H,C,K] (v: [B,H,C,V]); state [B,H,K,V].
+
+    Returns (o [B,H,C,V], new state). All f32.
+    """
+    c = r.shape[2]
+    L = jnp.cumsum(logw, axis=2)                     # inclusive cumulative log-decay
+    L_prev = L - logw                                # exclusive
+    L_tot = L[:, :, -1:, :]                          # [B,H,1,K]
+    shift = 0.5 * L_tot
+    rq = r * jnp.exp(L_prev - shift)                 # bounded by e^(|L|/2)
+    kq = k * jnp.exp(shift - L)
+    scores = jnp.einsum("bhck,bhik->bhci", rq, kq)   # exp(L_prev[c] - L[i])
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)    # strict lower triangle
+    scores = jnp.where(mask[None, None], scores, 0.0)
+    diag = jnp.einsum("bhck,bhck->bhc", r, u[None, :, None, :] * k)
+    o = jnp.einsum("bhci,bhiv->bhcv", scores, v)     # intra-chunk
+    o = o + diag[..., None] * v                      # bonus (i = t) term
+    o = o + jnp.einsum("bhck,bhkv->bhcv", r * jnp.exp(L_prev), state)  # inter
+    kdec = k * jnp.exp(L_tot - L)                    # decayed-to-chunk-end keys
+    new_state = state * jnp.exp(L_tot).swapaxes(2, 3) \
+        + jnp.einsum("bhck,bhcv->bhkv", kdec, v)
+    return o, new_state
+
+
+class RWKVModel:
+    def __init__(self, cfg: ModelConfig, rules: Rules | None = None,
+                 seq_shard: bool = True):
+        self.cfg = cfg
+        self.rules = rules or Rules({})
+        mdl = self.rules.present("model")
+        self.act_spec = P(self.rules.dp() or None,
+                          mdl[0] if (seq_shard and mdl) else None, None)
+        self.n_heads = cfg.n_heads
+        self.hd = cfg.hd
+
+    # ------------------------------------------------------------- params
+    def _build_block(self):
+        cfg, rules = self.cfg, self.rules
+        d, h, hd, f = cfg.d_model, self.n_heads, self.hd, cfg.d_ff
+        dp = rules.maybe(d, "data")
+        mdl = rules.maybe(h, "model")
+        f_sh = rules.maybe(f, "model")
+
+        def build(key):
+            b = ParamBuilder(key, cfg.pdtype)
+            init_norm(b, "ln1", d)
+            for nm in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+                b.const(nm, jnp.full((d,), 0.5), P(None))
+            for nm in ("wr", "wk", "wv", "wg"):
+                b.normal(nm, (d, h, hd), P(dp, mdl, None))
+            b.normal("wo", (h, hd, d), P(mdl, None, dp), scale=1.0 / math.sqrt(d))
+            b.const("w0", jnp.full((h, hd), -0.6), P(mdl, None))
+            b.normal("w_lora_a", (d, LORA_R), P(dp, None))
+            b.zeros("w_lora_b", (LORA_R, h, hd), P(None, mdl, None))
+            b.const("u", jnp.full((h, hd), 0.5), P(mdl, None))
+            b.ones("ln_x", (h, hd), P(mdl, None))
+            # channel mix
+            init_norm(b, "ln2", d)
+            for nm in ("mu_ck", "mu_cr"):
+                b.const(nm, jnp.full((d,), 0.5), P(None))
+            b.normal("ck", (d, f), P(dp, f_sh))
+            b.normal("cv", (f, d), P(f_sh, dp))
+            b.normal("cr", (d, d), P(dp, None))
+            return b.params, b.specs
+
+        return build
+
+    def init(self, key):
+        cfg = self.cfg
+        kb, ke = jax.random.split(key)
+        params, specs = stack_init(self._build_block(), kb, cfg.n_layers)
+        params = {f"blocks/{k}": v for k, v in params.items()}
+        specs = {f"blocks/{k}": v for k, v in specs.items()}
+        b = ParamBuilder(ke, cfg.pdtype)
+        vs = self.rules.maybe(cfg.vocab, "model")
+        ds = self.rules.maybe(cfg.d_model, "data")
+        b.normal("embed", (cfg.vocab, cfg.d_model), P(vs, ds), scale=1.0)
+        b.normal("unembed", (cfg.d_model, cfg.vocab), P(ds, vs))
+        init_norm(b, "ln_f", cfg.d_model)
+        params.update(b.params)
+        specs.update(b.specs)
+        self._specs = specs
+        return params
+
+    def abstract(self, key=None):
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return shapes, dict(self._specs)
+
+    # ----------------------------------------------------------- layer fns
+    def _decay(self, p, xw):
+        """Data-dependent decay (the Finch signature): log w in [LOGW_MIN, 0)."""
+        lora = jnp.einsum("bcr,rhk->bchk", jnp.tanh(xw @ p["w_lora_a"]),
+                          p["w_lora_b"]).astype(jnp.float32)
+        logw = -jnp.exp(p["w0"].astype(jnp.float32) + lora)
+        return jnp.maximum(logw, LOGW_MIN)
+
+    def _time_mix_chunk(self, p, x, prev_tok, state):
+        """x: [B, C, D] one chunk; prev_tok [B, D]; state [B,H,K,V]."""
+        cfg, h, hd = self.cfg, self.n_heads, self.hd
+        bsz, c, d = x.shape
+        xn = rmsnorm(x, p["ln1"], cfg.eps)
+        xx = jnp.concatenate([prev_tok[:, None], xn[:, :-1]], axis=1)
+        proj = lambda nm, xi: jnp.einsum("bcd,dhk->bhck", xi, p[nm])
+        r = proj("wr", _lerp(xn, xx, p["mu_r"])).astype(jnp.float32)
+        k = proj("wk", _lerp(xn, xx, p["mu_k"])).astype(jnp.float32)
+        v = proj("wv", _lerp(xn, xx, p["mu_v"])).astype(jnp.float32)
+        g = proj("wg", _lerp(xn, xx, p["mu_g"]))
+        logw = self._decay(p, _lerp(xn, xx, p["mu_w"])).transpose(0, 2, 1, 3)
+        o, new_state = _chunk_wkv(r, k, v, logw, p["u"].astype(jnp.float32),
+                                  state)
+        o = _head_norm(o.astype(cfg.cdtype).transpose(0, 2, 1, 3), p["ln_x"],
+                       cfg.eps)                      # [B,C,H,V]
+        o = o * jax.nn.silu(g.transpose(0, 2, 1, 3))
+        y = jnp.einsum("bchk,hkd->bcd", o, p["wo"])
+        return x + y, xn[:, -1], new_state
+
+    def _channel_mix_chunk(self, p, x, prev_tok):
+        cfg = self.cfg
+        xn = rmsnorm(x, p["ln2"], cfg.eps)
+        xx = jnp.concatenate([prev_tok[:, None], xn[:, :-1]], axis=1)
+        kk = jnp.square(jax.nn.relu(_lerp(xn, xx, p["mu_ck"]) @ p["ck"]))
+        rr = jax.nn.sigmoid(_lerp(xn, xx, p["mu_cr"]) @ p["cr"])
+        return x + rr * (kk @ p["cv"]), xn[:, -1]
+
+    def _layer_chunk(self, p, x, carry):
+        """One layer over one chunk. carry = (tmix_prev, cmix_prev, state)."""
+        tprev, cprev, state = carry
+        x, tprev, state = self._time_mix_chunk(p, x, tprev, state)
+        x, cprev = self._channel_mix_chunk(p, x, cprev)
+        return shard_act(x, self.act_spec, self.rules), (tprev, cprev, state)
+
+    # ------------------------------------------------------------ forward
+    def _zero_carry(self, bsz):
+        cfg, h, hd = self.cfg, self.n_heads, self.hd
+        return (jnp.zeros((bsz, cfg.d_model), cfg.cdtype),
+                jnp.zeros((bsz, cfg.d_model), cfg.cdtype),
+                jnp.zeros((bsz, h, hd, hd), jnp.float32))
+
+    def _run_layers(self, params, x, carries=None):
+        """x [B, S, D]; scan layers outer, chunks inner. Returns final
+        hidden states + per-layer carries (the decode cache)."""
+        cfg = self.cfg
+        blocks = flat_get(params, "blocks")
+        bsz, s, _ = x.shape
+        n_chunks, tail = divmod(s, CHUNK)
+
+        def layer_body(h_seq, xs):
+            layer_p, carry0 = xs
+
+            def chunk_body(carry, xc):
+                xc, carry = self._layer_chunk(layer_p, xc, carry)
+                return carry, xc
+
+            main, rest = h_seq[:, : n_chunks * CHUNK], h_seq[:, n_chunks * CHUNK:]
+            carry = carry0
+            parts = []
+            if n_chunks:
+                chunks = main.reshape(bsz, n_chunks, CHUNK, -1).swapaxes(0, 1)
+                carry, ys = jax.lax.scan(chunk_body, carry, chunks)
+                parts.append(ys.swapaxes(0, 1).reshape(bsz, n_chunks * CHUNK, -1))
+            if tail:  # ragged final chunk (prefill lengths % CHUNK != 0)
+                yt, carry = self._layer_chunk(layer_p, rest, carry)
+                parts.append(yt)
+            out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+            return out, carry
+
+        layer_body = jax.checkpoint(layer_body,
+                                    policy=remat_policy())
+        if carries is None:
+            z = self._zero_carry(bsz)
+            carries = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), z)
+        x, carries = jax.lax.scan(layer_body, x, (blocks, carries))
+        return x, carries
+
+    def loss(self, params, batch, q_chunk=None, loss_chunk=512):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+        x = shard_act(x, self.act_spec, self.rules)
+        x, _ = self._run_layers(params, x)
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        return cross_entropy(lambda l: l, x, params["unembed"], labels,
+                             mask=mask, chunk=loss_chunk)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        z = self._zero_carry(batch_size)
+        return {
+            "carries": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), z),
+            "pos": jnp.asarray(0, jnp.int32),
+        }
+
+    def cache_specs(self, batch_size: int, max_seq: int):
+        dp = self.rules.maybe(batch_size, "pod", "data")
+        mdl = self.rules.maybe(self.n_heads, "model")
+        return {
+            "carries": (P(None, dp, None), P(None, dp, None),
+                        P(None, dp, mdl, None, None)),
+            "pos": P(),
+        }
+
+    def prefill(self, params, batch, max_seq: int, q_chunk=None):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+        x, carries = self._run_layers(params, x)
+        x = rmsnorm(x[:, -1:], params["ln_f"], cfg.eps)
+        cache = {"carries": carries,
+                 "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+        return cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    def decode_step(self, params, cache, tokens):
+        """Exact single-token recurrence (state is O(1) in sequence)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.cdtype)  # [B, 1, D]
+        blocks = flat_get(params, "blocks")
+
+        def body(h, xs):
+            layer_p, carry = xs
+            h, carry = self._layer_chunk(layer_p, h, carry)
+            return h, carry
+
+        x, carries = jax.lax.scan(body, x, (blocks, cache["carries"]))
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        new_cache = {"carries": carries, "pos": cache["pos"] + 1}
+        return new_cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    # ------------------------------------------------------------- probes
+    def probe_block(self, seq_len: int | None = None):
+        """One layer over ONE chunk; multiplier = L * n_chunks."""
+        def fn(layer_p, xc, tprev, cprev, state):
+            y, _ = self._layer_chunk(layer_p, xc, (tprev, cprev, state))
+            return y
+
+        return fn, self.cfg.n_layers  # caller multiplies by n_chunks
+
+    def probe_block_decode(self):
+        def fn(layer_p, xc, tprev, cprev, state):
+            y, (t, c, s) = self._layer_chunk(layer_p, xc, (tprev, cprev, state))
+            return y, t, c, s
+
+        return fn, self.cfg.n_layers

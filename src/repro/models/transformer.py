@@ -1,0 +1,210 @@
+"""Dense decoder-only transformer (starcoder2 / yi / minitron / qwen2.5)
+plus the VLM variant (internvl2: same backbone, patch-embedding stub).
+
+Layer-stacked parameters + lax.scan over layers keep the HLO compact for
+the 512-device dry-run; single-block probe entry points give the roofline
+exact per-layer costs (XLA's cost analysis counts a while body once).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamBuilder, Rules, flat_get, stack_init, shard_act, remat_policy
+from .config import ModelConfig
+from .layers import (apply_attn, cross_entropy, init_attn, init_mlp,
+                     init_norm, mlp, rmsnorm)
+
+__all__ = ["DenseModel", "init_block", "apply_block"]
+
+
+def init_block(cfg: ModelConfig, rules: Rules):
+    """Builder for one decoder block's params (flat dict + specs)."""
+
+    def build(key):
+        b = ParamBuilder(key, cfg.pdtype)
+        init_norm(b, "ln1", cfg.d_model)
+        init_attn(b, cfg, rules)
+        init_norm(b, "ln2", cfg.d_model)
+        init_mlp(b, cfg, rules)
+        return b.params, b.specs
+
+    return build
+
+
+def apply_block(p: dict, cfg: ModelConfig, x, *, positions, cache=None,
+                q_chunk=None, act_spec=None, window=None, rules=None):
+    """Pre-norm block: x + attn(ln(x)); x + mlp(ln(x)). Returns (x, cache)."""
+    h, new_cache = apply_attn(p, cfg, rmsnorm(x, p["ln1"], cfg.eps),
+                              positions=positions, cache=cache,
+                              q_chunk=q_chunk, window=window)
+    x = shard_act(x + h, act_spec, rules)
+    x = x + mlp(p, cfg, rmsnorm(x, p["ln2"], cfg.eps))
+    return shard_act(x, act_spec, rules), new_cache
+
+
+class DenseModel:
+    """family in {"dense", "vlm"}."""
+
+    block_key = "blocks"
+
+    def __init__(self, cfg: ModelConfig, rules: Rules | None = None,
+                 seq_shard: bool = True):
+        self.cfg = cfg
+        self.rules = rules or Rules({})
+        # sequence-parallel layer-boundary activations (hillclimb lever)
+        mdl = self.rules.present("model")
+        self.act_spec = P(self.rules.dp() or None,
+                          mdl[0] if (seq_shard and mdl) else None, None)
+
+    # ------------------------------------------------------------- params
+    def _build_block(self):
+        return init_block(self.cfg, self.rules)
+
+    def init(self, key):
+        cfg, rules = self.cfg, self.rules
+        kb, ke, ku, kf = jax.random.split(key, 4)
+        params, specs = stack_init(self._build_block(), kb, cfg.n_layers)
+        params = {f"{self.block_key}/{k}": v for k, v in params.items()}
+        specs = {f"{self.block_key}/{k}": v for k, v in specs.items()}
+        b = ParamBuilder(ke, cfg.pdtype)
+        vocab_sh = rules.maybe(cfg.vocab, "model")
+        d_sh = rules.maybe(cfg.d_model, "data")
+        b.normal("embed", (cfg.vocab, cfg.d_model), P(vocab_sh, d_sh), scale=1.0)
+        b.normal("unembed", (cfg.d_model, cfg.vocab), P(d_sh, vocab_sh))
+        init_norm(b, "ln_f", cfg.d_model)
+        if cfg.family == "vlm":
+            # patch-embedding stub: a projection of precomputed ViT features
+            b.normal("vision_proj", (cfg.d_model, cfg.d_model), P(d_sh, None))
+        params.update(b.params)
+        specs.update(b.specs)
+        self._specs = specs
+        return params
+
+    def abstract(self, key=None):
+        """(shapes, specs) without allocating — dry-run entry."""
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return shapes, dict(self._specs)
+
+    # ------------------------------------------------------------ forward
+    def embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+        if cfg.family == "vlm":
+            vis = batch["vision"].astype(cfg.cdtype) @ params["vision_proj"]
+            x = jnp.concatenate([vis, x], axis=1)
+        return shard_act(x, self.act_spec, self.rules)
+
+    def _scan_blocks(self, params, x, positions, q_chunk, window=None):
+        cfg = self.cfg
+        blocks = flat_get(params, self.block_key)
+
+        def body(h, layer_p):
+            h, _ = apply_block(layer_p, cfg, h, positions=positions,
+                               q_chunk=q_chunk, act_spec=self.act_spec,
+                               window=window, rules=self.rules)
+            return h, None
+
+        body = jax.checkpoint(body, policy=remat_policy())
+        x, _ = jax.lax.scan(body, x, blocks)
+        return x
+
+    def hidden_states(self, params, batch, q_chunk=None):
+        x = self.embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        return self._scan_blocks(params, x, positions, q_chunk)
+
+    def loss(self, params, batch, q_chunk=None, loss_chunk=512):
+        """Next-token CE. For VLM, loss is only on the text positions."""
+        cfg = self.cfg
+        x = self.hidden_states(params, batch, q_chunk=q_chunk)
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        tokens = batch["tokens"]
+        n_front = x.shape[1] - tokens.shape[1]
+        x_text = x[:, n_front:]
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        return cross_entropy(lambda l: l, x_text, params["unembed"], labels,
+                             mask=mask, chunk=loss_chunk)
+
+    # ------------------------------------------------------------ serving
+    def cache_shape(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        kvh_sh = self.rules.maybe(cfg.n_kv_heads, "model")
+        seq_sh = self.rules.maybe(max_seq, "model") if kvh_sh is None else None
+        bsp = self.rules.maybe(batch_size, "pod", "data")
+        spec = P(None, bsp, seq_sh, kvh_sh, None)
+        shape = (cfg.n_layers, batch_size, max_seq, cfg.n_kv_heads, cfg.hd)
+        return {"k": (shape, spec), "v": (shape, spec), "pos": ((), P())}
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        shapes = self.cache_shape(batch_size, max_seq)
+        cache = {k: jnp.zeros(s, self.cfg.pdtype if k != "pos" else jnp.int32)
+                 for k, (s, _) in shapes.items()}
+        cache["pos"] = jnp.asarray(0, jnp.int32)
+        return cache
+
+    def cache_specs(self, batch_size: int, max_seq: int):
+        return {k: spec for k, (_, spec) in self.cache_shape(batch_size, max_seq).items()}
+
+    def _blocks_with_cache(self, params, x, cache, q_chunk=None):
+        cfg = self.cfg
+        blocks = flat_get(params, self.block_key)
+        positions = cache["pos"] + jnp.arange(x.shape[1])
+
+        def body(h, xs):
+            layer_p, k_l, v_l = xs
+            lcache = {"k": k_l, "v": v_l, "pos": cache["pos"]}
+            h, new_c = apply_block(layer_p, cfg, h, positions=positions,
+                                   cache=lcache, q_chunk=q_chunk,
+                                   act_spec=self.act_spec, rules=self.rules)
+            return h, (new_c["k"], new_c["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x, (blocks, cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs, "pos": cache["pos"] + x.shape[1]}
+        return x, new_cache
+
+    def prefill(self, params, batch, max_seq: int, q_chunk=None):
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        cache = self.init_cache(x.shape[0], max_seq)
+        x, cache = self._blocks_with_cache(params, x, cache, q_chunk=q_chunk)
+        x = rmsnorm(x[:, -1:], params["ln_f"], cfg.eps)
+        return cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    def decode_step(self, params, cache, tokens):
+        """tokens [B, 1] -> (new_cache, logits [B, 1, V])."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.cdtype)
+        x, cache = self._blocks_with_cache(params, x, cache)
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        return cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    # ------------------------------------------------------------- probes
+    def probe_block(self):
+        """(fn, multiplier): one decoder block, for exact per-layer costs."""
+        cfg = self.cfg
+
+        def fn(layer_p, x):
+            positions = jnp.arange(x.shape[1])
+            y, _ = apply_block(layer_p, cfg, x, positions=positions,
+                               act_spec=self.act_spec, rules=self.rules)
+            return y
+
+        return fn, cfg.n_layers
+
+    def probe_block_decode(self):
+        cfg = self.cfg
+
+        def fn(layer_p, x, k, v, pos):
+            positions = pos + jnp.arange(x.shape[1])
+            y, c = apply_block(layer_p, cfg, x, positions=positions,
+                               cache={"k": k, "v": v, "pos": pos},
+                               act_spec=self.act_spec, rules=self.rules)
+            return y, c["k"], c["v"]
+
+        return fn, cfg.n_layers

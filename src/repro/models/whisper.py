@@ -1,0 +1,254 @@
+"""Whisper-tiny (arXiv:2212.04356): encoder-decoder with a conv audio
+frontend. Per the assignment spec, the conv frontend is a STUB —
+``input_specs()`` supplies precomputed mel-frame embeddings [B, T_a, D];
+the model projects them and runs the transformer backbone.
+
+Encoder: bidirectional attention over audio frames (learned positions).
+Decoder: causal self-attention (KV cache) + cross-attention to the
+encoder output (cross K/V computed once at prefill and cached).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamBuilder, Rules, flat_get, stack_init, shard_act, remat_policy
+from .config import ModelConfig
+from .layers import (apply_attn, cross_entropy, init_attn, init_mlp,
+                     init_norm, mlp, rmsnorm)
+
+__all__ = ["WhisperModel"]
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig, rules: Rules | None = None,
+                 seq_shard: bool = True):
+        self.cfg = cfg
+        self.rules = rules or Rules({})
+        mdl = self.rules.present("model")
+        self.act_spec = P(self.rules.dp() or None,
+                          mdl[0] if (seq_shard and mdl) else None, None)
+
+    # ------------------------------------------------------------- params
+    def _build_enc_block(self):
+        cfg, rules = self.cfg, self.rules
+
+        def build(key):
+            b = ParamBuilder(key, cfg.pdtype)
+            init_norm(b, "ln1", cfg.d_model)
+            init_attn(b, cfg, rules)
+            init_norm(b, "ln2", cfg.d_model)
+            init_mlp(b, cfg, rules)
+            return b.params, b.specs
+
+        return build
+
+    def _build_dec_block(self):
+        cfg, rules = self.cfg, self.rules
+
+        def build(key):
+            b = ParamBuilder(key, cfg.pdtype)
+            init_norm(b, "ln1", cfg.d_model)
+            init_attn(b, cfg, rules, prefix="self_attn")
+            init_norm(b, "ln_x", cfg.d_model)
+            init_attn(b, cfg, rules, prefix="cross_attn")
+            init_norm(b, "ln2", cfg.d_model)
+            init_mlp(b, cfg, rules)
+            return b.params, b.specs
+
+        return build
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        enc, enc_s = stack_init(self._build_enc_block(), k1, cfg.encoder_layers)
+        dec, dec_s = stack_init(self._build_dec_block(), k2, cfg.n_layers)
+        params = {f"enc/{k}": v for k, v in enc.items()}
+        params.update({f"dec/{k}": v for k, v in dec.items()})
+        specs = {f"enc/{k}": v for k, v in enc_s.items()}
+        specs.update({f"dec/{k}": v for k, v in dec_s.items()})
+        b = ParamBuilder(k3, cfg.pdtype)
+        vs = self.rules.maybe(cfg.vocab, "model")
+        ds = self.rules.maybe(cfg.d_model, "data")
+        b.normal("embed", (cfg.vocab, cfg.d_model), P(vs, ds), scale=1.0)
+        b.normal("unembed", (cfg.d_model, cfg.vocab), P(ds, vs))
+        b.normal("audio_proj", (cfg.d_model, cfg.d_model), P(ds, None))
+        b.normal("enc_pos", (cfg.frontend_len, cfg.d_model), P(None, ds),
+                 scale=0.02)
+        # sized to cover the decode_32k cell (32768 positions + margin)
+        b.normal("dec_pos", (40960, cfg.d_model), P(None, ds), scale=0.02)
+        init_norm(b, "ln_enc", cfg.d_model)
+        init_norm(b, "ln_f", cfg.d_model)
+        params.update(b.params)
+        specs.update(b.specs)
+        self._specs = specs
+        return params
+
+    def abstract(self, key=None):
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return shapes, dict(self._specs)
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, audio):
+        cfg = self.cfg
+        x = audio.astype(cfg.cdtype) @ params["audio_proj"]
+        x = x + params["enc_pos"][: x.shape[1]].astype(cfg.cdtype)
+        x = shard_act(x, self.act_spec, self.rules)
+        blocks = flat_get(params, "enc")
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, layer_p):
+            hn = rmsnorm(h, layer_p["ln1"], cfg.eps)
+            # bidirectional self-attention (kv_override with own k/v, no rope)
+            k = jnp.einsum("bsd,dhk->bshk", hn, layer_p["attn/wk"])
+            v = jnp.einsum("bsd,dhk->bshk", hn, layer_p["attn/wv"])
+            a, _ = apply_attn(layer_p, cfg, hn, positions=positions,
+                              kv_override=(k, v), use_rope=False)
+            h = shard_act(h + a, self.act_spec, self.rules)
+            h = h + mlp(layer_p, cfg, rmsnorm(h, layer_p["ln2"], cfg.eps))
+            return shard_act(h, self.act_spec, self.rules), None
+
+        x, _ = jax.lax.scan(body, x, blocks)
+        return rmsnorm(x, params["ln_enc"], cfg.eps)
+
+    # ------------------------------------------------------------ decoder
+    def _dec_block(self, p, x, enc_kv, *, positions, cache=None, q_chunk=None):
+        cfg = self.cfg
+        h, new_cache = apply_attn(p, cfg, rmsnorm(x, p["ln1"], cfg.eps),
+                                  positions=positions, cache=cache,
+                                  q_chunk=q_chunk, prefix="self_attn",
+                                  use_rope=False)
+        x = shard_act(x + h, self.act_spec, self.rules)
+        h, _ = apply_attn(p, cfg, rmsnorm(x, p["ln_x"], cfg.eps),
+                          positions=positions, kv_override=enc_kv,
+                          prefix="cross_attn", use_rope=False)
+        x = shard_act(x + h, self.act_spec, self.rules)
+        x = x + mlp(p, cfg, rmsnorm(x, p["ln2"], cfg.eps))
+        return shard_act(x, self.act_spec, self.rules), new_cache
+
+    def _cross_kv(self, params, enc_out):
+        """Per-decoder-layer cross K/V from the encoder output (cached)."""
+        blocks = flat_get(params, "dec")
+
+        def body(_, layer_p):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["cross_attn/wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["cross_attn/wv"])
+            return 0, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(body, 0, blocks)
+        return ks, vs
+
+    def _dec_embed(self, params, tokens, pos0):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.cdtype)
+        pos = params["dec_pos"]
+        sl = jax.lax.dynamic_slice_in_dim(pos, pos0, tokens.shape[1]) \
+            if not isinstance(pos0, int) else pos[pos0: pos0 + tokens.shape[1]]
+        return shard_act(x + sl.astype(cfg.cdtype), self.act_spec, self.rules)
+
+    def loss(self, params, batch, q_chunk=None, loss_chunk=512):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio"])
+        cross = self._cross_kv(params, enc_out)
+        x = self._dec_embed(params, batch["tokens"], 0)
+        positions = jnp.arange(x.shape[1])
+        blocks = flat_get(params, "dec")
+
+        def body(h, xs):
+            layer_p, ck, cv = xs
+            h, _ = self._dec_block(layer_p, h, (ck, cv), positions=positions,
+                                   q_chunk=q_chunk)
+            return h, None
+
+        body = jax.checkpoint(body, policy=remat_policy())
+        x, _ = jax.lax.scan(body, x, (blocks, *cross))
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        return cross_entropy(lambda l: l, x, params["unembed"], labels,
+                             mask=mask, chunk=loss_chunk)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        kv = (cfg.n_layers, batch_size, max_seq, cfg.n_kv_heads, cfg.hd)
+        cross = (cfg.n_layers, batch_size, cfg.frontend_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(kv, cfg.pdtype), "v": jnp.zeros(kv, cfg.pdtype),
+                "ck": jnp.zeros(cross, cfg.pdtype),
+                "cv": jnp.zeros(cross, cfg.pdtype),
+                "pos": jnp.asarray(0, jnp.int32)}
+
+    def cache_specs(self, batch_size: int, max_seq: int):
+        dp = self.rules.maybe(batch_size, "pod", "data")
+        kv_sh = self.rules.maybe(self.cfg.n_kv_heads, "model")
+        s = P(None, dp, None, kv_sh, None)
+        return {"k": s, "v": s, "ck": s, "cv": s, "pos": P()}
+
+    def prefill(self, params, batch, max_seq: int, q_chunk=None):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio"])
+        ck, cv = self._cross_kv(params, enc_out)
+        cache = self.init_cache(batch["tokens"].shape[0], max_seq)
+        cache["ck"], cache["cv"] = ck.astype(cfg.pdtype), cv.astype(cfg.pdtype)
+        x = self._dec_embed(params, batch["tokens"], 0)
+        positions = jnp.arange(x.shape[1])
+        blocks = flat_get(params, "dec")
+
+        def body(h, xs):
+            layer_p, k_l, v_l, ck_l, cv_l = xs
+            lcache = {"k": k_l, "v": v_l, "pos": jnp.asarray(0, jnp.int32)}
+            h, nc = self._dec_block(layer_p, h, (ck_l, cv_l),
+                                    positions=positions, cache=lcache,
+                                    q_chunk=q_chunk)
+            return h, (nc["k"], nc["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x, (blocks, cache["k"], cache["v"],
+                                             cache["ck"], cache["cv"]))
+        cache["k"], cache["v"] = ks, vs
+        cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+        x = rmsnorm(x[:, -1:], params["ln_f"], cfg.eps)
+        return cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = self._dec_embed(params, tokens, pos)
+        blocks = flat_get(params, "dec")
+
+        def body(h, xs):
+            layer_p, k_l, v_l, ck_l, cv_l = xs
+            lcache = {"k": k_l, "v": v_l, "pos": pos}
+            h, nc = self._dec_block(layer_p, h, (ck_l, cv_l),
+                                    positions=pos + jnp.arange(1),
+                                    cache=lcache)
+            return h, (nc["k"], nc["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x, (blocks, cache["k"], cache["v"],
+                                             cache["ck"], cache["cv"]))
+        new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+        x = rmsnorm(x, params["ln_f"], cfg.eps)
+        return new_cache, (x @ params["unembed"]).astype(jnp.float32)
+
+    # ------------------------------------------------------------- probes
+    def probe_block(self, seq_len=None):
+        cfg = self.cfg
+
+        def fn(layer_p, x, enc_k, enc_v):
+            positions = jnp.arange(x.shape[1])
+            y, _ = self._dec_block(layer_p, x, (enc_k, enc_v),
+                                   positions=positions)
+            return y
+
+        return fn, cfg.n_layers
+
+    def probe_block_decode(self):
+        cfg = self.cfg
+
+        def fn(layer_p, x, k, v, ck, cv, pos):
+            lcache = {"k": k, "v": v, "pos": pos}
+            y, nc = self._dec_block(layer_p, x, (ck, cv),
+                                    positions=pos + jnp.arange(1), cache=lcache)
+            return y, nc["k"], nc["v"]
+
+        return fn, cfg.n_layers

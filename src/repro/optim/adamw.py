@@ -1,0 +1,83 @@
+"""AdamW on flat param dicts, with cosine schedule and global-norm clip.
+
+Optimizer moments are stored in float32 and inherit each parameter's
+PartitionSpec, so under the FSDP x TP weight sharding the optimizer state
+is fully sharded (ZeRO) with no extra machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_schedule", "global_norm", "clip_by_global_norm"]
+
+Params = dict[str, jnp.ndarray]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+                        tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4                 # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Params) -> dict:
+        zeros = {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+                "step": jnp.asarray(0, jnp.int32)}
+
+    def state_specs(self, param_specs: dict) -> dict:
+        from jax.sharding import PartitionSpec as P
+        return {"m": dict(param_specs), "v": dict(param_specs), "step": P()}
+
+    def update(self, grads: Params, state: dict, params: Params):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        new_m, new_v, new_p = {}, {}, {}
+        for k, g in grads.items():
+            g32 = g.astype(jnp.float32)
+            m = b1 * state["m"][k] + (1 - b1) * g32
+            v = b2 * state["v"][k] + (1 - b2) * g32 * g32
+            mhat = m / bc1
+            vhat = v / bc2
+            upd = mhat / (jnp.sqrt(vhat) + self.eps)
+            p32 = params[k].astype(jnp.float32)
+            decay = self.weight_decay if params[k].ndim >= 2 else 0.0
+            p32 = p32 - lr * (upd + decay * p32)
+            new_m[k], new_v[k] = m, v
+            new_p[k] = p32.astype(params[k].dtype)
+        return new_p, {"m": new_m, "v": new_v, "step": step}, {
+            "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}

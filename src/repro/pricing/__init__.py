@@ -1,0 +1,41 @@
+"""repro.pricing — the derivatives-pricing application domain (paper §4).
+
+The F3 framework re-built in JAX: contracts (underlyings + derivatives),
+the Monte Carlo engine (jnp / Pallas / shard_map backends), the Table 1
+workload, the Table 2 platform cluster, online benchmarking, and the
+characterise -> allocate -> execute solver flow.
+"""
+from .contracts import (  # noqa: F401
+    ASIAN,
+    BARRIER,
+    DIGITAL_DOUBLE_BARRIER,
+    DOUBLE_BARRIER,
+    EUROPEAN,
+    BlackScholes,
+    Heston,
+    Option,
+    PricingTask,
+    asian,
+    barrier,
+    digital_double_barrier,
+    double_barrier,
+    european,
+    payoff_from_stats,
+)
+from .mc import PriceResult, path_stats, price, price_sharded  # noqa: F401
+from .platforms import (  # noqa: F401
+    TABLE2_SPECS,
+    LocalJaxPlatform,
+    Platform,
+    PlatformSpec,
+    RunRecord,
+    SimulatedPlatform,
+    TaskPlatformModel,
+    benchmark,
+    build_cluster,
+    characterise,
+    kflop_per_path,
+    model_matrices,
+)
+from .solver import SOLVERS, ExecutionReport, PricingSolver  # noqa: F401
+from .workload import TABLE1_CATEGORIES, make_task, table1_workload  # noqa: F401

@@ -1,0 +1,169 @@
+"""Derivatives-pricing domain types (paper §4.1.2).
+
+The domain has two data types — *underlyings* (the stochastic model of the
+asset) and *derivatives* (the contract payoff) — and one function,
+``price``. This module defines both types plus the payoff algebra.
+
+All five option classes of the paper's Table 1 workload are expressible
+from four per-path statistics (terminal price, running arithmetic mean,
+running min, running max), which is what lets a single Monte Carlo kernel
+serve every contract:
+
+    European              max(±(S_T - K), 0)
+    Asian (arithmetic)    max(±(avg - K), 0)
+    Barrier (up-and-out)  1[max < B_up] * European
+    Double barrier (KO)   1[B_lo < min and max < B_up] * European
+    Digital double (no-touch)  Q * 1[B_lo < min and max < B_up]
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+__all__ = [
+    "BlackScholes", "Heston",
+    "EUROPEAN", "ASIAN", "BARRIER", "DOUBLE_BARRIER", "DIGITAL_DOUBLE_BARRIER",
+    "Option", "european", "asian", "barrier", "double_barrier",
+    "digital_double_barrier", "payoff_from_stats", "PricingTask",
+]
+
+
+# --------------------------------------------------------------------------
+# Underlyings
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlackScholes:
+    """Geometric Brownian motion: dS = r S dt + sigma S dW."""
+
+    spot: float
+    rate: float
+    volatility: float
+
+    kind: str = dataclasses.field(default="black-scholes", init=False, repr=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Heston:
+    """Heston stochastic volatility:
+
+        dS = r S dt + sqrt(v) S dW_S
+        dv = kappa (theta - v) dt + xi sqrt(v) dW_v,  corr(dW_S, dW_v) = rho
+
+    Simulated with the full-truncation Euler scheme (v clamped at 0 inside
+    drift and diffusion), the standard bias/robustness trade-off.
+    """
+
+    spot: float
+    rate: float
+    v0: float
+    kappa: float
+    theta: float
+    xi: float
+    rho: float
+
+    kind: str = dataclasses.field(default="heston", init=False, repr=False)
+
+
+# --------------------------------------------------------------------------
+# Derivatives
+# --------------------------------------------------------------------------
+
+EUROPEAN, ASIAN, BARRIER, DOUBLE_BARRIER, DIGITAL_DOUBLE_BARRIER = range(5)
+
+_PAYOFF_NAMES = {
+    EUROPEAN: "E", ASIAN: "A", BARRIER: "B",
+    DOUBLE_BARRIER: "DB", DIGITAL_DOUBLE_BARRIER: "DDB",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Option:
+    payoff: int
+    strike: float = 0.0
+    lower: float = 0.0
+    upper: float = math.inf
+    payout: float = 1.0  # digital options
+    call: bool = True
+
+    @property
+    def code(self) -> str:
+        return _PAYOFF_NAMES[self.payoff]
+
+
+def european(strike: float, call: bool = True) -> Option:
+    return Option(EUROPEAN, strike=strike, call=call)
+
+
+def asian(strike: float, call: bool = True) -> Option:
+    return Option(ASIAN, strike=strike, call=call)
+
+
+def barrier(strike: float, upper: float, call: bool = True) -> Option:
+    """Up-and-out knock-out barrier option (discretely monitored)."""
+    return Option(BARRIER, strike=strike, upper=upper, call=call)
+
+
+def double_barrier(strike: float, lower: float, upper: float, call: bool = True) -> Option:
+    return Option(DOUBLE_BARRIER, strike=strike, lower=lower, upper=upper, call=call)
+
+
+def digital_double_barrier(payout: float, lower: float, upper: float) -> Option:
+    """No-touch digital: pays ``payout`` iff the path stays inside (lo, up)."""
+    return Option(DIGITAL_DOUBLE_BARRIER, payout=payout, lower=lower, upper=upper)
+
+
+def payoff_from_stats(s_t, avg, mn, mx, option: Option):
+    """Undiscounted payoff from per-path statistics.
+
+    Pure jnp; shared verbatim by the Pallas kernel body, the jnp oracle and
+    the distributed engine, so every backend prices identically.
+    """
+    sign = jnp.float32(1.0 if option.call else -1.0)
+    strike = jnp.float32(option.strike)
+    vanilla = jnp.maximum(sign * (s_t - strike), jnp.float32(0.0))
+    asian_p = jnp.maximum(sign * (avg - strike), jnp.float32(0.0))
+    alive_up = mx < jnp.float32(option.upper)
+    alive = alive_up & (mn > jnp.float32(option.lower))
+    zero = jnp.float32(0.0)
+    if option.payoff == EUROPEAN:
+        return vanilla
+    if option.payoff == ASIAN:
+        return asian_p
+    if option.payoff == BARRIER:
+        return jnp.where(alive_up, vanilla, zero)
+    if option.payoff == DOUBLE_BARRIER:
+        return jnp.where(alive, vanilla, zero)
+    if option.payoff == DIGITAL_DOUBLE_BARRIER:
+        return jnp.where(alive, jnp.float32(option.payout), zero)
+    raise ValueError(f"unknown payoff {option.payoff}")
+
+
+# --------------------------------------------------------------------------
+# Task = underlying + derivative + simulation spec
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PricingTask:
+    """One atomic (but divisible-by-paths) pricing task.
+
+    ``task_id`` seeds the RNG stream so every task draws from a disjoint,
+    decomposition-independent random stream.
+    """
+
+    underlying: BlackScholes | Heston
+    option: Option
+    maturity: float
+    n_steps: int
+    task_id: int = 0
+    category: str = ""
+
+    @property
+    def discount(self) -> float:
+        return math.exp(-self.underlying.rate * self.maturity)
+
+    @property
+    def normals_per_step(self) -> int:
+        return 2 if isinstance(self.underlying, Heston) else 1

@@ -1,0 +1,193 @@
+"""Monte Carlo pricing engine (paper §4.1.3's F3 execution layer, in JAX).
+
+Three backends, all drawing the *same* Threefry stream per (task, path,
+step) so results agree across decompositions:
+
+  * ``path_stats`` / ``price``          — pure jnp (lax.scan), the oracle
+  * ``price(..., backend="pallas")``    — Pallas TPU kernels (repro.kernels)
+  * ``price_sharded``                   — shard_map over a mesh axis; each
+        device simulates a disjoint path range and partial moments are
+        combined with psum (the domain's "divisible task" property,
+        eq. 5, realised as data parallelism)
+
+The engine returns the two domain metrics directly: the price estimate and
+the 95% confidence interval (the *accuracy* metric, eq. 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.prng import normal_pair
+from .contracts import BlackScholes, Heston, Option, PricingTask, payoff_from_stats
+
+__all__ = ["path_stats", "price", "price_sharded", "PriceResult"]
+
+
+# --------------------------------------------------------------------------
+# Path simulation (pure jnp — this IS the oracle the kernels are tested on)
+# --------------------------------------------------------------------------
+
+def _bs_step(u: BlackScholes, dt: float):
+    drift = jnp.float32((u.rate - 0.5 * u.volatility**2) * dt)
+    vol = jnp.float32(u.volatility * np.sqrt(dt))
+
+    def step(carry, inputs):
+        s = carry
+        z, _ = inputs
+        return s * jnp.exp(drift + vol * z), s
+
+    return step
+
+
+def _heston_step(u: Heston, dt: float):
+    dt32 = jnp.float32(dt)
+    kappa, theta, xi = jnp.float32(u.kappa), jnp.float32(u.theta), jnp.float32(u.xi)
+    rate = jnp.float32(u.rate)
+    rho = jnp.float32(u.rho)
+    rho_c = jnp.float32(np.sqrt(1.0 - u.rho**2))
+    sqrt_dt = jnp.float32(np.sqrt(dt))
+
+    def step(carry, inputs):
+        s, v = carry
+        z_s, z2 = inputs
+        z_v = rho * z_s + rho_c * z2
+        v_plus = jnp.maximum(v, jnp.float32(0.0))
+        sqrt_v = jnp.sqrt(v_plus)
+        s_new = s * jnp.exp((rate - 0.5 * v_plus) * dt32 + sqrt_v * sqrt_dt * z_s)
+        v_new = v + kappa * (theta - v_plus) * dt32 + xi * sqrt_v * sqrt_dt * z_v
+        return (s_new, v_new), s
+
+    return step
+
+
+def path_stats(task: PricingTask, n_paths: int, seed: int, path_offset: int = 0):
+    """Simulate ``n_paths`` paths; return (s_t, avg, mn, mx), each (n_paths,).
+
+    Conventions (shared with the kernels): the running average is over the
+    n_steps post-initial observations; min/max include the initial spot.
+    The RNG counter is (path_index, step); the key is (seed, task_id), so
+    the draw for a given (task, path, step) is decomposition-independent.
+    """
+    u = task.underlying
+    dt = task.maturity / task.n_steps
+    paths = jnp.asarray(path_offset, jnp.uint32) + jnp.arange(n_paths, dtype=jnp.uint32)
+    k0 = jnp.uint32(seed)
+    k1 = jnp.uint32(task.task_id)
+    steps = jnp.arange(task.n_steps, dtype=jnp.uint32)
+
+    # Draw this step's normals from the (path, step) counter.
+    def normals(step_idx):
+        return normal_pair(k0, k1, paths, jnp.broadcast_to(step_idx, paths.shape))
+
+    spot = jnp.full((n_paths,), jnp.float32(u.spot))
+    if isinstance(u, BlackScholes):
+        step_fn = _bs_step(u, dt)
+        carry0: Any = spot
+    else:
+        step_fn = _heston_step(u, dt)
+        carry0 = (spot, jnp.full((n_paths,), jnp.float32(u.v0)))
+
+    def body(state, step_idx):
+        carry, acc, mn, mx = state
+        z = normals(step_idx)
+        new_carry, _ = step_fn(carry, z)
+        s_new = new_carry[0] if isinstance(new_carry, tuple) else new_carry
+        acc = acc + s_new
+        mn = jnp.minimum(mn, s_new)
+        mx = jnp.maximum(mx, s_new)
+        return (new_carry, acc, mn, mx), None
+
+    # Carry running (sum, min, max) instead of materialising the whole
+    # (n_steps, n_paths) path matrix: O(paths) memory at any path count.
+    state0 = (carry0, jnp.zeros_like(spot), spot, spot)
+    (carry, acc, mn, mx), _ = jax.lax.scan(body, state0, steps)
+    s_t = carry[0] if isinstance(carry, tuple) else carry
+    avg = acc / jnp.float32(task.n_steps)
+    return s_t, avg, mn, mx
+
+
+def _moments(task: PricingTask, n_paths: int, seed: int, path_offset: int = 0):
+    """Partial sums (sum payoff, sum payoff^2) — the mergeable statistic."""
+    s_t, avg, mn, mx = path_stats(task, n_paths, seed, path_offset)
+    pay = payoff_from_stats(s_t, avg, mn, mx, task.option)
+    return pay.sum(), (pay * pay).sum()
+
+
+@functools.partial(dataclasses.dataclass, frozen=True)
+class PriceResult:
+    price: Any
+    ci95: Any          # the paper's accuracy metric: size of the 95% CI
+    std_error: Any
+    n_paths: int
+
+    def __repr__(self):
+        return (f"PriceResult(price={float(self.price):.6f}, "
+                f"ci95={float(self.ci95):.6f}, n={int(self.n_paths)})")
+
+
+def _finalize(task: PricingTask, pay_sum, pay_sq, n) -> PriceResult:
+    n = jnp.float32(n)
+    mean = pay_sum / n
+    var = jnp.maximum(pay_sq / n - mean * mean, 0.0)
+    disc = jnp.float32(task.discount)
+    stderr = disc * jnp.sqrt(var / n)
+    return PriceResult(price=disc * mean, ci95=jnp.float32(2 * 1.96) * stderr,
+                       std_error=stderr, n_paths=n)
+
+
+def price(task: PricingTask, n_paths: int, seed: int = 0,
+          backend: str = "jnp", block_paths: int = 1024) -> PriceResult:
+    """Price one task. ``backend`` in {"jnp", "pallas"}.
+
+    The CI convention follows the paper: accuracy = *size* of the 95%
+    interval (2 x 1.96 x stderr), in pricing currency.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        pay_sum, pay_sq = ops.mc_moments(task, n_paths, seed, block_paths=block_paths)
+    else:
+        # task is a frozen (hashable) dataclass: static under jit.
+        pay_sum, pay_sq = jax.jit(_moments, static_argnums=(0, 1))(task, n_paths, seed)
+    return _finalize(task, pay_sum, pay_sq, n_paths)
+
+
+# --------------------------------------------------------------------------
+# Distributed pricing: shard_map over a mesh axis
+# --------------------------------------------------------------------------
+
+def price_sharded(task: PricingTask, n_paths: int, mesh: Mesh,
+                  axis: str = "data", seed: int = 0) -> PriceResult:
+    """Split paths across ``mesh[axis]``; merge partial moments with psum.
+
+    Because the RNG is counter-based on the *global* path index, the result
+    is bit-identical in distribution to the single-device run (up to float
+    reduction order) for any device count — the allocation layer may
+    re-split tasks freely (eq. 5) without statistical consequences.
+    """
+    n_dev = mesh.shape[axis]
+    if n_paths % n_dev:
+        raise ValueError(f"n_paths={n_paths} not divisible by mesh[{axis}]={n_dev}")
+    local = n_paths // n_dev
+
+    def worker():
+        idx = jax.lax.axis_index(axis)
+        offset = (idx * local).astype(jnp.uint32)
+        s, s2 = _moments(task, local, seed, path_offset=offset)
+        return jax.lax.psum(s, axis), jax.lax.psum(s2, axis)
+
+    spec = P()  # fully replicated scalars
+    # check_vma=False: the scan carry starts replicated and becomes varying
+    # through the axis_index-derived path offset, which the static VMA check
+    # cannot see through.
+    fn = jax.shard_map(worker, mesh=mesh, in_specs=(), out_specs=(spec, spec),
+                       check_vma=False)
+    pay_sum, pay_sq = jax.jit(fn)()
+    return _finalize(task, pay_sum, pay_sq, n_paths)

@@ -1,0 +1,136 @@
+"""F3-style solver: characterise -> allocate -> execute (paper Fig 1 flow).
+
+This is the orchestration layer a domain user ("Julia") touches:
+
+    solver = PricingSolver(tasks, platforms)
+    solver.characterise()                       # online benchmarking, (2)
+    alloc = solver.allocate(accuracy=0.05,      # trade-off selection, (3-4)
+                            method="milp")
+    report = solver.execute(alloc)              # evaluation, (5)
+
+``execute`` converts the allocation shares back into per-platform path
+counts through each platform's own fitted accuracy coefficient (this is
+exactly what delta[i,j] = beta_i * alpha_ij**2 encodes), runs every
+(platform, task) shard, pools the partial estimates inverse-variance
+style, and reports predicted vs measured makespan and accuracy — the
+quantities compared in the paper's Figs 8 & 10.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import (
+    Allocation,
+    AllocationProblem,
+    SUPPORT_ATOL,
+    makespan,
+    milp_allocation,
+    ml_allocation,
+    proportional_allocation,
+)
+from .contracts import PricingTask
+from .platforms import (
+    Platform,
+    RunRecord,
+    TaskPlatformModel,
+    characterise as _characterise,
+    model_matrices,
+)
+
+__all__ = ["PricingSolver", "ExecutionReport", "SOLVERS"]
+
+SOLVERS: dict[str, Callable[..., Allocation]] = {
+    "heuristic": lambda p, **kw: proportional_allocation(p),
+    "ml": lambda p, **kw: ml_allocation(p, **kw),
+    "milp": lambda p, **kw: milp_allocation(p, **kw),
+}
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    allocation: Allocation
+    predicted_makespan: float
+    measured_makespan: float
+    platform_latencies: dict[str, float]
+    prices: dict[int, float]
+    predicted_ci: dict[int, float]
+    measured_ci: dict[int, float]
+    records: list[RunRecord]
+
+    @property
+    def makespan_error(self) -> float:
+        return abs(self.predicted_makespan - self.measured_makespan) / self.measured_makespan
+
+
+class PricingSolver:
+    def __init__(self, tasks: Sequence[PricingTask], platforms: Sequence[Platform]):
+        self.tasks = list(tasks)
+        self.platforms = list(platforms)
+        self.models: dict[tuple[str, int], TaskPlatformModel] | None = None
+        self._delta: np.ndarray | None = None
+        self._gamma: np.ndarray | None = None
+
+    # -- step 2: characterisation ------------------------------------------
+    def characterise(self, path_ladder: Sequence[int] | None = None,
+                     seed: int = 1) -> None:
+        self.models = _characterise(self.platforms, self.tasks, path_ladder, seed)
+        self._delta, self._gamma = model_matrices(self.models, self.platforms, self.tasks)
+
+    def problem(self, accuracy: float | np.ndarray) -> AllocationProblem:
+        if self._delta is None:
+            raise RuntimeError("characterise() first")
+        c = np.broadcast_to(np.asarray(accuracy, dtype=np.float64),
+                            (len(self.tasks),)).copy()
+        return AllocationProblem(delta=self._delta, gamma=self._gamma, c=c)
+
+    # -- steps 3-4: allocation ---------------------------------------------
+    def allocate(self, accuracy: float | np.ndarray, method: str = "milp",
+                 **solver_kw) -> Allocation:
+        return SOLVERS[method](self.problem(accuracy), **solver_kw)
+
+    # -- step 5: execution ---------------------------------------------------
+    def execute(self, allocation: Allocation, accuracy: float | np.ndarray,
+                seed: int = 3) -> ExecutionReport:
+        assert self.models is not None
+        problem = self.problem(accuracy)
+        A = allocation.A
+        records: list[RunRecord] = []
+        plat_lat = {p.spec.name: 0.0 for p in self.platforms}
+        # per-task accumulators for pooled estimates
+        num = {t.task_id: 0.0 for t in self.tasks}
+        den = {t.task_id: 0.0 for t in self.tasks}
+        var = {t.task_id: 0.0 for t in self.tasks}
+
+        for i, p in enumerate(self.platforms):
+            for j, t in enumerate(self.tasks):
+                share = A[i, j]
+                if share <= SUPPORT_ATOL:
+                    continue
+                m = self.models[(p.spec.name, t.task_id)]
+                n_needed = m.accuracy.paths_for_accuracy(float(problem.c[j]))
+                n_ij = max(int(np.ceil(share * n_needed)), 64)
+                rec = p.run(t, n_ij, seed=seed)
+                records.append(rec)
+                plat_lat[p.spec.name] += rec.latency
+                num[t.task_id] += rec.n_paths * rec.price
+                den[t.task_id] += rec.n_paths
+                # pooled CI: ci^2 = sum (n_ij * ci_ij)^2 / n_tot^2
+                var[t.task_id] += (rec.n_paths * rec.ci95) ** 2
+
+        prices = {tid: num[tid] / den[tid] for tid in num}
+        measured_ci = {tid: float(np.sqrt(var[tid])) / den[tid] for tid in num}
+        predicted_ci = {t.task_id: float(problem.c[j])
+                        for j, t in enumerate(self.tasks)}
+        return ExecutionReport(
+            allocation=allocation,
+            predicted_makespan=makespan(A, problem),
+            measured_makespan=max(plat_lat.values()),
+            platform_latencies=plat_lat,
+            prices=prices,
+            predicted_ci=predicted_ci,
+            measured_ci=measured_ci,
+            records=records,
+        )

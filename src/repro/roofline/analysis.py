@@ -1,0 +1,108 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e targets).
+
+    compute    = FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory     = HBM bytes / (chips x 819e9 B/s)
+    collective = collective bytes / (chips x 50e9 B/s ICI)
+
+FLOPs / bytes / collective-bytes are reconstructed from single-layer
+probes x static trip counts (see repro.launch.probes for why the full-HLO
+numbers cannot be used: scan bodies are counted once). Probe cost numbers
+from XLA are per-*program*; under SPMD the program is the per-device
+shard, so terms come out per device and the chip count divides only into
+the MODEL_FLOPS utilisation ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HW", "RooflineTerms", "analyze", "format_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12   # bf16 / chip
+    hbm_bw: float = 819e9        # B/s / chip
+    ici_bw: float = 50e9         # B/s / link (conservative single-link)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float          # reconstructed, per device
+    chips: int
+    microbatches: int
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound = max term (perfect overlap) — we report
+        the max; the sum is the zero-overlap bound."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs across chips — remat/redundancy."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """model FLOPs / (chips x peak x step_time) — roofline fraction."""
+        denom = self.chips * HW().peak_flops * self.step_time_s
+        return self.model_flops / denom if denom else 0.0
+
+
+def _probe_totals(probes: dict) -> tuple[float, float, float]:
+    flops = bytes_ = coll = 0.0
+    for name, p in probes.items():
+        if not isinstance(p, dict) or "multiplier" not in p:
+            continue
+        m = p["multiplier"]
+        flops += p.get("flops", 0.0) * m
+        bytes_ += p.get("bytes", 0.0) * m
+        coll += p.get("coll_bytes", 0.0) * m
+    return flops, bytes_, coll
+
+
+def analyze(stats, chips: int, hw: HW = HW()) -> RooflineTerms:
+    """stats: CellStats (or its to_json dict)."""
+    if not isinstance(stats, dict):
+        stats = stats.to_json()
+    flops, bytes_, coll = _probe_totals(stats.get("probes", {}))
+    # outside-the-scan residue from the full program (embedding transfers,
+    # final collectives) — counted once, which is exactly its trip count.
+    coll += stats.get("full_collective_bytes", 0)
+    return RooflineTerms(
+        arch=stats["arch"], shape=stats["shape"], mesh=stats["mesh"],
+        compute_s=flops / hw.peak_flops,
+        memory_s=bytes_ / hw.hbm_bw,
+        collective_s=coll / hw.ici_bw,
+        model_flops=stats.get("model_flops", 0.0),
+        hlo_flops=flops,
+        chips=chips,
+        microbatches=stats.get("microbatches", 1),
+    )
+
+
+def format_table(rows: list[RooflineTerms]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':9s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'bound':>10s} "
+           f"{'MFU':>7s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.mesh:9s} {r.compute_s:10.4g} "
+            f"{r.memory_s:10.4g} {r.collective_s:10.4g} {r.bottleneck:>10s} "
+            f"{r.mfu:7.2%} {r.useful_flops_ratio:7.2%}")
+    return "\n".join(lines)

@@ -1,0 +1,75 @@
+"""Post-SPMD HLO parsing: collective payload bytes per op class.
+
+``compiled.as_text()`` is the per-device program after GSPMD partitioning
+(shapes are local shards; collectives are explicit ops). For every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+(including async -start forms) we take
+
+    payload = max(result bytes, largest operand bytes)
+
+as the per-device traffic proxy (all-gather's result and reduce-scatter's
+operand are the "big end" of the transfer; for all-reduce both ends match).
+
+NOTE (scan bodies): ops inside while loops are counted ONCE by this parse,
+exactly like XLA's cost analysis. The roofline therefore never reads the
+full-model HLO for per-layer terms — it scales single-layer *probe* HLOs
+by the known layer/microbatch multipliers (see repro.launch.probes), and
+uses the full-model parse only for the outside-the-scan residue.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "parse_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,128]{1,0}  or  bf16[4,8,128]  or (tuples handled per-element)
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, list[int]]:
+    """op-kind -> list of per-op payload bytes (per device)."""
+    out: dict[str, list[int]] = defaultdict(list)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        result_types, kind = m.group(1), m.group(2)
+        result_bytes = _shape_bytes(result_types)
+        # operand types are printed inline in the call parens
+        args = line[m.end():]
+        operand_bytes = _shape_bytes(args.split("),", 1)[0]) if args else 0
+        out[kind].append(max(result_bytes, operand_bytes))
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Total per-device collective payload bytes in this HLO module."""
+    return sum(sum(v) for v in parse_collectives(hlo_text).values())

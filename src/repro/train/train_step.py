@@ -1,0 +1,131 @@
+"""Training step: microbatched gradient accumulation, remat, and the
+distributed-optimization extras (gradient compression for the cross-pod
+all-reduce).
+
+Structure (per global step):
+    scan over microbatches:
+        forward (remat-per-layer inside the model) + backward
+        accumulate grads in float32
+    [optional] int8-compressed cross-pod all-reduce of the accumulated
+        grads (multi-pod mesh only — the pod axis is the slow DCN link,
+        exactly the gamma-dominated regime of the paper's latency model)
+    AdamW update
+
+Within-pod DP/FSDP/TP gradient reductions are inserted by XLA SPMD from
+the shardings; the pod axis is kept *out* of the batch specs when
+compression is on, and reduced explicitly in int8 via shard_map — halving
+(vs f32: quartering) the slowest collective's bytes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamW
+
+__all__ = ["make_train_step", "compressed_psum", "make_eval_step"]
+
+
+def compressed_psum(tree, axis: str, bits: int = 8):
+    """All-reduce ``tree`` over ``axis`` in int8 (inside shard_map).
+
+    Per-leaf symmetric quantisation: s = pmax(|g|)/127; q = round(g/s);
+    accumulate int32 (exact for <= 2^23 pods); dequantise with the shared
+    scale. Error is bounded by s/2 per element per pod.
+    """
+    assert bits == 8, "int8 is the supported compressed format"
+
+    def one(g):
+        g32 = g.astype(jnp.float32)
+        s = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis) / 127.0
+        s = jnp.maximum(s, 1e-20)
+        q = jnp.clip(jnp.round(g32 / s), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        return (total.astype(jnp.float32) * s).astype(g.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def _split_microbatches(batch, n):
+    def split(x):
+        assert x.shape[0] % n == 0, (x.shape, n)
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, opt: AdamW, *, microbatches: int = 1,
+                    loss_kwargs: dict | None = None,
+                    grad_compress_axis: str | None = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). jit/shard the result at the call site (launch/train.py or
+    launch/dryrun.py)."""
+    loss_kwargs = loss_kwargs or {}
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, **loss_kwargs)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        mbs = _split_microbatches(batch, microbatches)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            loss_acc, gacc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                gacc, grads)
+            return (loss_acc + loss, gacc), None
+
+        (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.float32(0.0), zero), mbs)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        new_params, new_state, om = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    if grad_compress_axis is None:
+        return train_step
+
+    # Multi-pod variant: per-pod grads computed with the pod axis manual
+    # (each pod sees its own batch shard), then reduced in int8 over the
+    # slow inter-pod links before the (replicated) optimizer update.
+    def train_step_compressed(params, opt_state, batch, *, mesh):
+        axis = grad_compress_axis
+
+        def per_pod(params, opt_state, batch):
+            loss, grads = grads_of(params, batch)
+            grads = compressed_psum(grads, axis)
+            npods = jax.lax.psum(1, axis)
+            grads = jax.tree.map(lambda g: g / npods, grads)
+            loss = jax.lax.pmean(loss, axis)
+            new_params, new_state, om = opt.update(grads, opt_state, params)
+            return new_params, new_state, {"loss": loss, **om}
+
+        return jax.shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(P(), P(), P(axis)),
+            out_specs=(P(), P(), P()),
+            check_vma=False,
+            axis_names={axis},
+        )(params, opt_state, batch)
+
+    return train_step_compressed
+
+
+def make_eval_step(model, loss_kwargs: dict | None = None):
+    loss_kwargs = loss_kwargs or {}
+
+    def eval_step(params, batch):
+        return model.loss(params, batch, **loss_kwargs)
+
+    return eval_step

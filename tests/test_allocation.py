@@ -1,0 +1,143 @@
+"""Allocation-solver tests (paper §3.2/§4.3/§6): invariants + quality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AllocationProblem,
+    check_allocation,
+    makespan,
+    milp_allocation,
+    ml_allocation,
+    platform_latencies,
+    proportional_allocation,
+    synthetic,
+)
+from repro.core.annealing import lp_polish
+
+
+def small_problem(seed=0, mu=4, tau=12, psi=1.0, case="Het-Inc"):
+    return synthetic.generate_case(case, tau=tau, mu=mu, psi=psi, seed=seed)
+
+
+# ---------------------------------------------------------------- invariants
+
+@given(seed=st.integers(0, 10_000), psi=st.floats(0.0, 10.0),
+       case=st.sampled_from(sorted(synthetic.TABLE3_CASES)))
+@settings(max_examples=25, deadline=None)
+def test_heuristic_constraints(seed, psi, case):
+    p = small_problem(seed, psi=max(psi, 1e-6), case=case)
+    a = proportional_allocation(p)
+    check_allocation(a.A, p)
+    assert a.makespan > 0
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_milp_constraints_and_dominance(seed):
+    p = small_problem(seed)
+    h = proportional_allocation(p)
+    m = milp_allocation(p, time_limit=20)
+    check_allocation(m.A, p)
+    # MILP never loses to the heuristic (it could fall back to it at worst)
+    assert m.makespan <= h.makespan * (1 + 1e-6)
+
+
+def test_ml_constraints_and_dominance():
+    p = small_problem(3)
+    h = proportional_allocation(p)
+    m = ml_allocation(p, chains=8, steps=1500, rounds=1, seed=0)
+    check_allocation(m.A, p)
+    assert m.makespan <= h.makespan * (1 + 1e-6)
+
+
+# ------------------------------------------------------------------- quality
+
+def test_heuristic_optimal_rank1_no_constants():
+    """Paper §4.3.2: with gamma=0 and task-independent platform speeds the
+    proportional heuristic is optimal (all platforms finish together)."""
+    rng = np.random.default_rng(0)
+    speed = rng.uniform(1, 10, size=5)          # per-platform s/path
+    work = rng.uniform(1, 100, size=9)          # per-task paths
+    W = np.outer(speed, work)
+    p = AllocationProblem.from_work(W, np.zeros_like(W))
+    h = proportional_allocation(p)
+    lat = platform_latencies(h.A, p)
+    np.testing.assert_allclose(lat, lat[0], rtol=1e-9)   # equalised
+    m = milp_allocation(p, time_limit=20)
+    assert h.makespan == pytest.approx(m.makespan, rel=1e-4)
+
+
+def test_milp_beats_heuristic_when_constants_dominate():
+    """Paper §6.3: large psi (constants dominate) is where MILP shines."""
+    p = small_problem(1, mu=6, tau=24, psi=10.0)
+    h = proportional_allocation(p)
+    m = milp_allocation(p, time_limit=30)
+    assert m.makespan < h.makespan / 2   # at least 2x better
+
+
+def test_milp_reports_certificate():
+    p = small_problem(2)
+    m = milp_allocation(p, time_limit=30)
+    assert m.solver == "milp"
+    assert m.meta["status"] in (0, 1, 3)
+    if m.optimal:
+        assert m.bound is not None
+        assert m.bound <= m.makespan * (1 + 1e-3)
+
+
+def test_lp_polish_improves_or_matches():
+    p = small_problem(5)
+    h = proportional_allocation(p)
+    out = lp_polish(p, np.ones((p.mu, p.tau), dtype=bool))
+    assert out is not None
+    _, m = out
+    assert m <= h.makespan * (1 + 1e-9)
+
+
+def test_atomic_milp():
+    p = small_problem(4, mu=3, tau=6)
+    m = milp_allocation(p, time_limit=20, atomic=True)
+    check_allocation(m.A, p)
+    # atomic solution must be integral
+    assert np.allclose(m.A, np.round(m.A), atol=1e-6)
+    # relaxed (divisible) problem can only be better or equal
+    r = milp_allocation(p, time_limit=20)
+    assert r.makespan <= m.makespan * (1 + 1e-6)
+
+
+# ------------------------------------------------------------------ makespan
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_makespan_is_max_of_platform_latencies(seed):
+    p = small_problem(seed)
+    rng = np.random.default_rng(seed)
+    A = rng.dirichlet(np.ones(p.mu), size=p.tau).T  # valid random allocation
+    check_allocation(A, p)
+    assert makespan(A, p) == pytest.approx(platform_latencies(A, p).max())
+
+
+def test_makespan_monotone_in_accuracy():
+    """Tighter accuracy (smaller c) => more paths => larger makespan."""
+    base = small_problem(6)
+    for solver in (proportional_allocation,):
+        prev = None
+        for c in (1.0, 0.5, 0.25):
+            p = AllocationProblem(delta=base.delta, gamma=base.gamma,
+                                  c=np.full(base.tau, c))
+            m = solver(p).makespan
+            if prev is not None:
+                assert m >= prev
+            prev = m
+
+
+def test_synthetic_generator_properties():
+    for name in synthetic.TABLE3_CASES:
+        p = synthetic.generate_case(name, tau=16, mu=8, psi=1.0, seed=0)
+        assert p.delta.shape == (8, 16)
+        assert (p.delta >= 1).all()
+        assert (p.gamma >= 0).all()
+    # consistency: fully consistent case has sorted columns
+    p = synthetic.generate_case("Het-Con", tau=16, mu=8, psi=1.0, seed=0)
+    assert (np.diff(p.delta, axis=0) >= 0).all()

@@ -1,0 +1,118 @@
+"""Pallas kernel tests: shape/dtype/payoff sweeps vs the pure-jnp oracle."""
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.mc_paths import LANES, mc_moments_kernel_call
+from repro.kernels.prng import normal_pair, threefry2x32, uniforms
+from repro.pricing import (
+    BlackScholes,
+    Heston,
+    PricingTask,
+    asian,
+    barrier,
+    digital_double_barrier,
+    double_barrier,
+    european,
+)
+
+BS = BlackScholes(spot=100.0, rate=0.05, volatility=0.25)
+HESTON = Heston(spot=90.0, rate=0.02, v0=0.09, kappa=1.5, theta=0.06, xi=0.4, rho=-0.6)
+
+OPTIONS = [
+    ("european", european(100.0)),
+    ("asian", asian(95.0, call=False)),
+    ("barrier", barrier(100.0, upper=135.0)),
+    ("double_barrier", double_barrier(100.0, 60.0, 150.0)),
+    ("digital", digital_double_barrier(7.5, 65.0, 145.0)),
+]
+
+
+# ------------------------------------------------------------------ RNG layer
+
+def test_threefry_matches_jax_reference():
+    import jax.numpy as jnp
+    from jax._src.prng import threefry_2x32
+
+    key = jnp.array([0xDEADBEEF, 0xCAFEF00D], dtype=jnp.uint32)
+    ctr = jnp.arange(64, dtype=jnp.uint32)
+    expect = np.asarray(threefry_2x32(key, ctr))
+    got0, got1 = threefry2x32(key[0], key[1], ctr[:32], ctr[32:])
+    np.testing.assert_array_equal(expect, np.concatenate([got0, got1]))
+
+
+def test_uniforms_open_interval():
+    import jax.numpy as jnp
+    u0, u1 = uniforms(jnp.uint32(1), jnp.uint32(2),
+                      jnp.arange(1 << 16, dtype=jnp.uint32), jnp.uint32(0))
+    for u in (u0, u1):
+        assert float(u.min()) > 0.0
+        assert float(u.max()) < 1.0
+
+
+def test_normals_moments():
+    import jax.numpy as jnp
+    z0, z1 = normal_pair(jnp.uint32(3), jnp.uint32(4),
+                         jnp.arange(1 << 17, dtype=jnp.uint32), jnp.uint32(0))
+    z = np.concatenate([np.asarray(z0), np.asarray(z1)])
+    assert abs(z.mean()) < 0.01
+    assert abs(z.std() - 1.0) < 0.01
+    assert not np.isnan(z).any()
+
+
+# ------------------------------------------------------------- kernel sweeps
+
+@pytest.mark.parametrize("name,option", OPTIONS)
+@pytest.mark.parametrize("underlying", [BS, HESTON], ids=["bs", "heston"])
+def test_kernel_matches_oracle_payoff_sweep(name, option, underlying):
+    task = PricingTask(underlying=underlying, option=option, maturity=1.0,
+                       n_steps=12, task_id=11)
+    ks, ks2 = ops.mc_moments(task, 4096, seed=17, block_paths=1024)
+    rs, rs2 = ref.mc_moments_ref(task, 4096, seed=17)
+    np.testing.assert_allclose(float(ks), float(rs), rtol=3e-5)
+    np.testing.assert_allclose(float(ks2), float(rs2), rtol=3e-5)
+
+
+@pytest.mark.parametrize("block_paths", [128, 256, 1024, 2048])
+def test_kernel_block_shape_sweep(block_paths):
+    """Result must be invariant to the VMEM tile size chosen."""
+    task = PricingTask(underlying=BS, option=european(100.0), maturity=0.5,
+                       n_steps=8, task_id=12)
+    n = 4096
+    s, s2 = ops.mc_moments(task, n, seed=1, block_paths=block_paths)
+    rs, rs2 = ref.mc_moments_ref(task, n, seed=1)
+    np.testing.assert_allclose(float(s), float(rs), rtol=3e-5)
+    np.testing.assert_allclose(float(s2), float(rs2), rtol=3e-5)
+
+
+@pytest.mark.parametrize("n_steps", [1, 7, 64])
+def test_kernel_steps_sweep(n_steps):
+    task = PricingTask(underlying=HESTON, option=asian(90.0), maturity=2.0,
+                       n_steps=n_steps, task_id=13)
+    s, s2 = ops.mc_moments(task, 2048, seed=2, block_paths=512)
+    rs, rs2 = ref.mc_moments_ref(task, 2048, seed=2)
+    np.testing.assert_allclose(float(s), float(rs), rtol=5e-5)
+    np.testing.assert_allclose(float(s2), float(rs2), rtol=5e-5)
+
+
+def test_kernel_per_block_partials_match_blocked_oracle():
+    """Block-level partial sums agree with the oracle blocked identically."""
+    task = PricingTask(underlying=BS, option=double_barrier(100.0, 70.0, 140.0),
+                       maturity=1.0, n_steps=8, task_id=14)
+    part = np.asarray(mc_moments_kernel_call(task, 2048, seed=3, block_paths=256))
+    expect = np.asarray(ref.mc_block_moments_ref(task, 2048, 3, 256))
+    assert part.shape == (8, 2)
+    np.testing.assert_allclose(part, expect, rtol=3e-5)
+
+
+def test_kernel_rejects_bad_blocks():
+    task = PricingTask(underlying=BS, option=european(100.0), maturity=1.0,
+                       n_steps=4, task_id=15)
+    with pytest.raises(ValueError):
+        mc_moments_kernel_call(task, 1000, seed=0, block_paths=100)  # not LANES-mult
+    with pytest.raises(ValueError):
+        mc_moments_kernel_call(task, 1000, seed=0, block_paths=256)  # not divisible
+
+
+def test_lanes_constant_is_tpu_native():
+    assert LANES == 128  # VREG lane width — BlockSpec alignment contract

@@ -1,0 +1,71 @@
+"""Metric-model tests (paper §3.1/§4.2): fitting, prediction, properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AccuracyModel,
+    CombinedModel,
+    LatencyModel,
+    fit_accuracy_model,
+    fit_latency_model,
+    relative_error,
+)
+
+
+def test_latency_fit_exact_recovery():
+    true = LatencyModel(beta=2.5e-6, gamma=0.125)
+    n = np.array([1e3, 1e4, 1e5, 1e6])
+    m = fit_latency_model(n, true(n))
+    assert m.beta == pytest.approx(true.beta, rel=1e-6)
+    assert m.gamma == pytest.approx(true.gamma, rel=1e-6)
+
+
+def test_accuracy_fit_exact_recovery():
+    true = AccuracyModel(alpha=42.0)
+    n = np.array([1e2, 1e4, 1e6])
+    m = fit_accuracy_model(n, true(n))
+    assert m.alpha == pytest.approx(42.0, rel=1e-6)
+
+
+def test_combined_model_eq9():
+    lat = LatencyModel(beta=1e-6, gamma=0.5)
+    acc = AccuracyModel(alpha=10.0)
+    comb = CombinedModel.from_models(lat, acc)
+    # delta = beta * alpha^2
+    assert comb.delta == pytest.approx(1e-4)
+    # consistency: latency to reach accuracy c == beta * paths_for(c) + gamma
+    c = 0.05
+    n = acc.paths_for_accuracy(c)
+    assert comb(c) == pytest.approx(lat(n), rel=1e-9)
+
+
+@given(
+    beta=st.floats(1e-9, 1e-3), gamma=st.floats(0, 10.0),
+    noise=st.floats(0, 0.02), seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_latency_fit_noise_robust(beta, gamma, noise, seed):
+    """Incorporation property: with b>=3 noisy points the fit stays within
+    a few x the noise floor in relative terms."""
+    rng = np.random.default_rng(seed)
+    n = np.logspace(3, 6, 8)
+    t = (beta * n + gamma) * (1 + rng.normal(0, noise, n.shape))
+    m = fit_latency_model(n, t)
+    pred_err = relative_error(m(n), beta * n + gamma)
+    assert pred_err.max() < max(10 * noise, 1e-6)
+
+
+def test_extrapolation_property():
+    """Extrapolation (paper §5): fit on small n, predict 100x larger."""
+    true = LatencyModel(beta=3e-6, gamma=0.2)
+    n_bench = np.array([1e3, 3e3, 1e4])
+    rng = np.random.default_rng(0)
+    m = fit_latency_model(n_bench, true(n_bench) * (1 + rng.normal(0, 0.01, 3)))
+    err = relative_error(m(1e6), true(1e6))
+    assert err < 0.1  # within 10% — the paper's headline number
+
+
+def test_relative_error_eq13():
+    assert relative_error(11.0, 10.0) == pytest.approx(0.1)
+    assert relative_error(9.0, 10.0) == pytest.approx(0.1)

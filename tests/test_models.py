@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU):
+one forward/train step asserting output shapes + no NaNs, plus decode
+consistency (prefill+decode == forward) where the family allows exact
+incremental evaluation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, cells_for, get_config
+from repro.data.pipeline import batch_for
+from repro.models import build_model
+from repro.optim.adamw import AdamW
+from repro.train.train_step import make_train_step
+
+B, S = 2, 32
+
+
+def make_batch(cfg, b=B, s=S, seed=0):
+    return {k: jnp.asarray(v) for k, v in batch_for(cfg, b, s, seed=seed).items()}
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).smoke()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        out[arch] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_finite(built, arch):
+    cfg, model, params = built[arch]
+    loss = jax.jit(model.loss)(params, make_batch(cfg))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # random-init loss should be near ln(vocab) for a uniform predictor
+    assert 0.5 * np.log(cfg.vocab) < float(loss) < 2.5 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_updates_and_finite(built, arch):
+    cfg, model, params = built[arch]
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(model, opt))
+    p1, s1, m1 = step(params, opt.init(params), make_batch(cfg))
+    assert np.isfinite(float(m1["loss"]))
+    assert np.isfinite(float(m1["grad_norm"]))
+    # params actually moved
+    deltas = [float(jnp.abs(p1[k] - params[k]).max()) for k in params]
+    assert max(deltas) > 0
+    # all leaves stay finite
+    for k, v in p1.items():
+        assert np.isfinite(np.asarray(v)).all(), k
+    # shapes preserved
+    for k in params:
+        assert p1[k].shape == params[k].shape
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_shapes_and_finite(built, arch):
+    cfg, model, params = built[arch]
+    if not cfg.has_decoder:
+        pytest.skip("no decoder")
+    batch = make_batch(cfg)
+    cache, logits = jax.jit(lambda p, b: model.prefill(p, b, S + 8))(params, batch)
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for _ in range(3):
+        cache, logits = jax.jit(model.decode_step)(params, cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "qwen25_3b", "whisper_tiny",
+                                  "rwkv6_1b6", "recurrentgemma_9b"])
+def test_incremental_decode_matches_full_forward(built, arch):
+    """Causal consistency: decoding token-by-token must reproduce the
+    full-sequence forward logits at each position."""
+    cfg, model, params = built[arch]
+    batch = make_batch(cfg, s=16)
+    # full-forward logits at the last position via prefill on all 16 tokens
+    _, full_last = jax.jit(lambda p, b: model.prefill(p, b, 24))(params, batch)
+    # prefill on 15 tokens, then decode the 16th
+    short = dict(batch)
+    short["tokens"] = batch["tokens"][:, :15]
+    cache, _ = jax.jit(lambda p, b: model.prefill(p, b, 24))(params, short)
+    _, dec_last = jax.jit(model.decode_step)(params, cache,
+                                             batch["tokens"][:, 15:16])
+    np.testing.assert_allclose(np.asarray(full_last)[:, 0],
+                               np.asarray(dec_last)[:, 0],
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= 1 and balanced-ish routing, most tokens
+    must be processed (output differs from a zeroed-MoE baseline)."""
+    cfg = get_config("moonshot_v1_16b_a3b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss = float(jax.jit(model.loss)(params, batch))
+    # zero the expert weights: loss must change (experts contribute)
+    p2 = dict(params)
+    for k in p2:
+        if "/moe/" in k and "router" not in k:
+            p2[k] = jnp.zeros_like(p2[k])
+    loss2 = float(jax.jit(model.loss)(p2, batch))
+    assert loss != pytest.approx(loss2, rel=1e-4)
+
+
+def test_rwkv_decode_matches_chunked_prefill():
+    """The exact recurrence (decode) must continue the chunked-parallel
+    form (prefill) — validates the chunk factorisation algebra."""
+    cfg = get_config("rwkv6_1b6").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 32), 0, cfg.vocab)
+    cache, last = jax.jit(lambda p, t: model.prefill(p, {"tokens": t}, 40))(params, toks)
+    # decode the same 32nd token from a 31-token prefill... chunk=16 needs
+    # multiples; decode 16 extra tokens one by one and compare state flow
+    c2, _ = jax.jit(lambda p, t: model.prefill(p, {"tokens": t}, 40))(params, toks[:, :16])
+    logits = None
+    for i in range(16, 32):
+        c2, logits = jax.jit(model.decode_step)(params, c2, toks[:, i:i + 1])
+    np.testing.assert_allclose(np.asarray(last), np.asarray(logits),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_cells_for_skips():
+    skips = {a: {s.name for s in cells_for(get_config(a))} for a in ARCHS}
+    assert "long_500k" not in skips["yi_9b"]          # full attention
+    assert "long_500k" in skips["rwkv6_1b6"]          # SSM
+    assert "long_500k" in skips["recurrentgemma_9b"]  # hybrid
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= skips["arctic_480b"]
+    total = sum(len(v) for v in skips.values())
+    assert total == 32  # 40 cells - 8 long_500k skips
+
+
+def test_param_counts_match_published_scale():
+    """Full configs should land near the published parameter counts."""
+    import math
+    expect = {"starcoder2_7b": 7e9, "yi_9b": 8.8e9, "qwen25_3b": 3e9,
+              "internvl2_76b": 69e9, "arctic_480b": 450e9,
+              "moonshot_v1_16b_a3b": 28e9,  # as-assigned: 48L x 64e x 1408
+              "recurrentgemma_9b": 8.5e9,
+              "rwkv6_1b6": 1.5e9, "minitron_8b": 7.5e9}
+    for arch, target in expect.items():
+        cfg = get_config(arch)
+        total, active = cfg.param_count()
+        total += 2 * cfg.vocab * cfg.d_model  # embeddings
+        assert 0.5 * target < total < 1.8 * target, (arch, total, target)
+        assert active <= total

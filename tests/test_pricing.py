@@ -1,0 +1,145 @@
+"""Pricing-domain tests: engine correctness, convergence, platform layer."""
+import math
+
+import jax
+import numpy as np
+import pytest
+from scipy.stats import norm
+
+from repro.pricing import (
+    BlackScholes,
+    Heston,
+    LocalJaxPlatform,
+    PricingTask,
+    SimulatedPlatform,
+    TABLE2_SPECS,
+    asian,
+    barrier,
+    benchmark,
+    double_barrier,
+    digital_double_barrier,
+    european,
+    price,
+    price_sharded,
+    table1_workload,
+)
+from repro.pricing.platforms import fit_models
+from jax.sharding import Mesh
+
+
+BS = BlackScholes(spot=100.0, rate=0.05, volatility=0.2)
+HESTON = Heston(spot=100.0, rate=0.03, v0=0.04, kappa=2.0, theta=0.04, xi=0.3, rho=-0.7)
+
+
+def bs_closed_form(s, k, r, sigma, t, call=True):
+    d1 = (math.log(s / k) + (r + sigma**2 / 2) * t) / (sigma * math.sqrt(t))
+    d2 = d1 - sigma * math.sqrt(t)
+    if call:
+        return s * norm.cdf(d1) - k * math.exp(-r * t) * norm.cdf(d2)
+    return k * math.exp(-r * t) * norm.cdf(-d2) - s * norm.cdf(-d1)
+
+
+@pytest.mark.parametrize("strike,call", [(90.0, True), (105.0, True), (110.0, False)])
+def test_european_vs_closed_form(strike, call):
+    task = PricingTask(underlying=BS, option=european(strike, call),
+                       maturity=1.0, n_steps=32, task_id=0)
+    res = price(task, 200_000)
+    ref = bs_closed_form(100, strike, 0.05, 0.2, 1.0, call)
+    assert abs(float(res.price) - ref) < max(float(res.ci95), 1e-3), \
+        f"MC {float(res.price)} vs closed form {ref} outside CI {float(res.ci95)}"
+
+
+def test_ci_shrinks_as_sqrt_n():
+    """The accuracy model's n^-1/2 law, measured from the engine itself."""
+    task = PricingTask(underlying=BS, option=european(100.0), maturity=1.0,
+                       n_steps=16, task_id=1)
+    ci_small = float(price(task, 4_096, seed=5).ci95)
+    ci_big = float(price(task, 65_536, seed=5).ci95)
+    assert ci_small / ci_big == pytest.approx(4.0, rel=0.15)  # sqrt(16)=4
+
+
+def test_price_ordering_invariants():
+    """Domain no-arbitrage orderings: knock-outs <= vanilla, DB <= B."""
+    mk = lambda o, i: PricingTask(underlying=HESTON, option=o, maturity=1.0,
+                                  n_steps=32, task_id=i)
+    n = 50_000
+    vanilla = float(price(mk(european(100.0), 2), n).price)
+    barr = float(price(mk(barrier(100.0, upper=140.0), 2), n).price)
+    dbarr = float(price(mk(double_barrier(100.0, 70.0, 140.0), 2), n).price)
+    assert barr <= vanilla + 1e-6
+    assert dbarr <= barr + 1e-6
+
+
+def test_digital_bounded_by_payout():
+    task = PricingTask(underlying=BS, option=digital_double_barrier(10.0, 70.0, 140.0),
+                       maturity=1.0, n_steps=32, task_id=3)
+    res = price(task, 20_000)
+    assert 0.0 <= float(res.price) <= 10.0
+
+
+def test_sharded_equals_unsharded():
+    task = PricingTask(underlying=BS, option=asian(95.0), maturity=1.5,
+                       n_steps=16, task_id=4)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    a = price(task, 32_768, seed=2)
+    b = price_sharded(task, 32_768, mesh, seed=2)
+    assert float(a.price) == pytest.approx(float(b.price), rel=1e-6)
+
+
+def test_path_decomposition_independence():
+    """Counter-based RNG: two half-runs with offsets == one full run."""
+    from repro.pricing.mc import path_stats
+    task = PricingTask(underlying=BS, option=european(100.0), maturity=1.0,
+                       n_steps=8, task_id=5)
+    full = path_stats(task, 1024, seed=9)
+    lo = path_stats(task, 512, seed=9, path_offset=0)
+    hi = path_stats(task, 512, seed=9, path_offset=512)
+    for f, l, h in zip(full, lo, hi):
+        np.testing.assert_array_equal(np.asarray(f), np.concatenate([l, h]))
+
+
+def test_workload_matches_table1():
+    tasks = table1_workload()
+    assert len(tasks) == 128
+    from collections import Counter
+    counts = Counter(t.category for t in tasks)
+    assert counts == {"BS-A": 10, "BS-B": 10, "BS-DB": 10, "BS-DDB": 5,
+                      "H-A": 25, "H-B": 29, "H-DB": 29, "H-DDB": 5, "H-E": 5}
+    assert len({t.task_id for t in tasks}) == 128
+
+
+def test_table2_has_16_platforms():
+    assert len(TABLE2_SPECS) == 16
+    cats = {s.category for s in TABLE2_SPECS}
+    assert cats == {"CPU", "GPU", "FPGA"}
+
+
+def test_simulated_platform_latency_model():
+    """Simulated latency must follow work/gflops + rtt within jitter."""
+    spec = TABLE2_SPECS[4]  # AWS Server EC1
+    p = SimulatedPlatform(spec, jitter=1e-6)
+    task = table1_workload()[0]
+    rec = p.run(task, 100_000)
+    from repro.pricing.platforms import kflop_per_path
+    expect = kflop_per_path(task) * 1e3 * 100_000 / (spec.gflops * 1e9) + spec.rtt_ms / 1e3
+    assert rec.latency == pytest.approx(expect, rel=1e-3)
+
+
+def test_online_benchmarking_fits_simulated_platform():
+    """End-to-end §3.1.4: bench a simulated platform, recover its beta."""
+    spec = TABLE2_SPECS[9]  # Local GPU 1: fast, negligible RTT
+    p = SimulatedPlatform(spec, jitter=0.001)
+    task = table1_workload()[3]
+    m = fit_models(benchmark(p, task, (2_000, 8_000, 32_000, 128_000)))
+    from repro.pricing.platforms import kflop_per_path
+    beta_true = kflop_per_path(task) * 1e3 / (spec.gflops * 1e9)
+    assert m.latency.beta == pytest.approx(beta_true, rel=0.05)
+
+
+def test_local_platform_runs_real_wallclock():
+    p = LocalJaxPlatform()
+    task = PricingTask(underlying=BS, option=european(100.0), maturity=1.0,
+                       n_steps=8, task_id=6)
+    rec = p.run(task, 4_096)
+    assert rec.latency > 0
+    assert rec.ci95 > 0

@@ -1,0 +1,85 @@
+"""Roofline/HLO-parsing + fleet-allocation unit tests (artifact-optional)."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.roofline.analysis import HW, analyze
+from repro.roofline.hlo import collective_bytes, parse_collectives
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = f32[256,1024]{1,0} parameter(0)
+  %ag = f32[4096,1024]{1,0} all-gather(f32[256,1024]{1,0} %p0), replica_groups={}
+  %ar = bf16[512]{0} all-reduce(bf16[512]{0} %x), to_apply=%add
+  %rs = f32[64,128]{1,0} reduce-scatter(f32[1024,128]{1,0} %y), dimensions={0}
+  %done = f32[8]{0} all-gather-done(f32[8]{0} %t)
+  %cp = u32[16]{0} collective-permute(u32[16]{0} %z), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    got = parse_collectives(HLO_SAMPLE)
+    assert set(got) == {"all-gather", "all-reduce", "reduce-scatter",
+                        "collective-permute"}
+    # all-gather payload = max(result, operand) = 4096*1024*4
+    assert got["all-gather"] == [4096 * 1024 * 4]
+    assert got["all-reduce"] == [512 * 2]
+    # reduce-scatter: operand is the big end
+    assert got["reduce-scatter"] == [1024 * 128 * 4]
+    assert collective_bytes(HLO_SAMPLE) == (4096 * 1024 * 4 + 512 * 2 +
+                                            1024 * 128 * 4 + 16 * 4)
+
+
+def test_analyze_terms_math():
+    stats = {"arch": "a", "shape": "s", "mesh": "16x16", "kind": "train",
+             "ok": True, "microbatches": 2, "model_flops": 1e15,
+             "full_collective_bytes": 50e9,
+             "probes": {"block": {"flops": 197e12, "bytes": 819e9,
+                                  "coll_bytes": 0.0, "multiplier": 1.0}}}
+    r = analyze(stats, chips=256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(1.0)
+    assert r.step_time_s == pytest.approx(1.0)
+    assert r.mfu == pytest.approx(1e15 / (256 * 197e12))
+
+
+ARTIFACTS = sorted(glob.glob("artifacts/dryrun/16x16/*__*.json"))
+
+
+@pytest.mark.skipif(not ARTIFACTS, reason="run repro.launch.dryrun first")
+def test_dryrun_artifacts_are_coherent():
+    ok = 0
+    for path in ARTIFACTS:
+        if os.path.basename(path).count("__") > 1:
+            continue
+        d = json.load(open(path))
+        assert d["mesh"] == "16x16"
+        if not d["ok"]:
+            continue
+        ok += 1
+        r = analyze(d, chips=256)
+        assert r.compute_s >= 0 and r.memory_s >= 0 and r.collective_s >= 0
+        assert r.bottleneck in ("compute", "memory", "collective")
+        if d["kind"] == "train":
+            assert d["model_flops"] > 0
+            assert 0 < r.useful_flops_ratio <= 1.5
+    assert ok >= 30  # 32 cells expected
+
+
+@pytest.mark.skipif(not ARTIFACTS, reason="run repro.launch.dryrun first")
+def test_fleet_allocation_from_artifacts():
+    from repro.launch.allocate import FLEET, cell_matrices, load_cells
+    from repro.core import AllocationProblem, proportional_allocation, \
+        milp_allocation, check_allocation
+    cells = load_cells("artifacts/dryrun/16x16")
+    assert len(cells) >= 30
+    delta, gamma = cell_matrices(cells[:12], FLEET, budget_steps=10)
+    prob = AllocationProblem.from_work(delta, gamma)
+    h = proportional_allocation(prob)
+    m = milp_allocation(prob, time_limit=20)
+    check_allocation(m.A, prob)
+    assert m.makespan <= h.makespan * (1 + 1e-6)

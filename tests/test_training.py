@@ -1,0 +1,174 @@
+"""Training-substrate tests: optimizer, microbatching, checkpoints,
+preemption resume, data determinism, gradient compression."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokens, batch_for
+from repro.models import build_model
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.train.train_step import make_train_step
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen25_3b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_adamw_decreases_loss(setup):
+    cfg, model, params = setup
+    opt = AdamW(lr=3e-3)
+    step = jax.jit(make_train_step(model, opt))
+    state = opt.init(params)
+    batch = {k: jnp.asarray(v) for k, v in batch_for(cfg, 4, 32).items()}
+    losses = []
+    for _ in range(20):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+
+def test_microbatching_matches_full_batch(setup):
+    """Grad accumulation must equal the full-batch gradient step."""
+    cfg, model, params = setup
+    opt = AdamW(lr=1e-3)
+    batch = {k: jnp.asarray(v) for k, v in batch_for(cfg, 8, 32).items()}
+    p1, _, m1 = jax.jit(make_train_step(model, opt))(params, opt.init(params), batch)
+    p4, _, m4 = jax.jit(make_train_step(model, opt, microbatches=4))(
+        params, opt.init(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+    for k in p1:
+        np.testing.assert_allclose(np.asarray(p1[k]), np.asarray(p4[k]),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(100)) == pytest.approx(0.0, abs=1e-9)
+    assert float(lr(55)) < float(lr(20))
+
+
+def test_grad_clip():
+    opt = AdamW(lr=1e-3, clip_norm=1e-9)  # absurdly tight clip
+    p = {"w": jnp.ones((4, 4))}
+    g = {"w": jnp.full((4, 4), 100.0)}
+    newp, _, m = opt.update(g, opt.init(p), p)
+    # with clip ~0, the update is ~ -lr * sign-ish tiny step + decay only
+    assert float(jnp.abs(newp["w"] - p["w"]).max()) < 1e-3
+    assert float(m["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_data_pipeline_deterministic_and_step_indexed():
+    ds = SyntheticTokens(vocab=1000, batch=4, seq=16, seed=7)
+    a = ds.get_batch(3)["tokens"]
+    b = ds.get_batch(3)["tokens"]
+    c = ds.get_batch(4)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any()
+    assert a.max() < 1000 and a.min() >= 0
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    cfg, model, params = setup
+    opt = AdamW()
+    state = opt.init(params)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, {"params": params, "opt": state}, blocking=True)
+    ck.save(10, {"params": params, "opt": state}, blocking=True)
+    assert ck.latest_step() == 10
+    out = ck.restore(10, {"params": params, "opt": state})
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]),
+                                      np.asarray(out["params"][k]))
+    assert int(out["opt"]["step"]) == int(state["step"])
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path, setup):
+    cfg, model, params = setup
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"params": params}, blocking=True)
+    assert ck.steps() == [3, 4]
+
+
+def test_preemption_restart_resumes_exactly(tmp_path):
+    """Kill training hard at step 6, restart, and the final params must
+    equal an uninterrupted run (data is step-indexed; ckpt every 3)."""
+    ckpt_a = str(tmp_path / "a")
+    ckpt_b = str(tmp_path / "b")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "qwen25_3b",
+            "--smoke", "--steps", "9", "--batch", "2", "--seq", "16",
+            "--ckpt-every", "3", "--log-every", "100"]
+    # uninterrupted
+    r = subprocess.run(base + ["--ckpt-dir", ckpt_a], env=ENV,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    # preempted at 6 (exit code 42), then resumed
+    r = subprocess.run(base + ["--ckpt-dir", ckpt_b, "--preempt-at", "7"],
+                       env=ENV, capture_output=True, text=True)
+    assert r.returncode == 42, r.stdout + r.stderr
+    r = subprocess.run(base + ["--ckpt-dir", ckpt_b], env=ENV,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "resumed from checkpoint step 6" in r.stdout, r.stdout
+
+    import numpy as np
+    za = np.load(os.path.join(ckpt_a, "step_9", "arrays.npz"))
+    zb = np.load(os.path.join(ckpt_b, "step_9", "arrays.npz"))
+    assert set(za.files) == set(zb.files)
+    for k in za.files:
+        np.testing.assert_allclose(za[k], zb[k], rtol=1e-5, atol=1e-6,
+                                   err_msg=k)
+
+
+def test_elastic_restore_onto_different_mesh(tmp_path, setup):
+    """Checkpoints are mesh-agnostic: save from a 1-device run, restore
+    with explicit shardings onto a (1,1) mesh (degenerate but exercises
+    the device_put resharding path)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    cfg, model, params = setup
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"params": params}, blocking=True)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    shardings = {k: NamedSharding(mesh, P()) for k in params}
+    out = ck.restore(1, {"params": params}, {"params": shardings})
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]),
+                                      np.asarray(out["params"][k]))
+
+
+def test_compressed_psum_single_device():
+    """int8 compressed all-reduce: on a 1-device axis it must round-trip
+    within quantisation error."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.train.train_step import compressed_psum
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    g = {"w": jnp.linspace(-3.0, 3.0, 128).reshape(8, 16)}
+
+    def f(g):
+        return compressed_psum(g, "pod")
+
+    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(),),
+                                out_specs=P(), check_vma=False))(g)
+    err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max()
+    assert err <= 3.0 / 127 + 1e-6  # one quantisation bucket
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(3 + 16))
