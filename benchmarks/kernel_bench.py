@@ -1,16 +1,43 @@
-"""Monte Carlo kernel benchmark: Pallas (interpret) vs jnp oracle, block
-sweep. On CPU the interpreter is a correctness tool, not a speed tool —
-the numbers recorded here are the blocking/shape trade-off data that the
-§Perf VMEM-tiling argument reads from."""
+"""Monte Carlo kernel + characterisation benchmarks.
+
+Part 1 — Pallas (interpret) vs jnp oracle, block sweep.  On CPU the
+interpreter is a correctness tool, not a speed tool — the numbers recorded
+here are the blocking/shape trade-off data that the §Perf VMEM-tiling
+argument reads from.
+
+Part 2 — batched vs per-task-looped characterisation.  The looped baseline
+replays the seed engine's behaviour (the task is a *static* jit argument,
+so every (task, rung) pair traces and compiles afresh); the batched engine
+takes task parameters as runtime arrays and compiles once per (family,
+ladder shape).  Reported as a JSON line for dashboards.
+"""
 from __future__ import annotations
 
+import json
+import time
+
+import jax
+
 from repro.kernels import ops, ref
-from repro.pricing import BlackScholes, PricingTask, european
+from repro.pricing import (
+    BlackScholes,
+    LocalJaxPlatform,
+    PricingTask,
+    RunRecord,
+    SimulatedPlatform,
+    TABLE2_SPECS,
+    characterise,
+    european,
+    group_by_family,
+    mc,
+)
+from repro.pricing.platforms import _TaskMoments, fit_models
+from repro.pricing.workload import table1_workload
 
 from .common import emit, timer
 
 
-def main(fast: bool = True) -> None:
+def bench_kernels() -> None:
     task = PricingTask(underlying=BlackScholes(100.0, 0.05, 0.2),
                        option=european(100.0), maturity=1.0,
                        n_steps=16, task_id=42)
@@ -28,6 +55,90 @@ def main(fast: bool = True) -> None:
             s.block_until_ready()
         emit(f"kernel.pallas_interpret.block_{bp}", t.us,
              f"blocks={n // bp};sum={float(s):.1f}")
+
+
+def _looped_characterise(platforms, tasks, ladder, seed=1, calib_paths=8192):
+    """The seed engine's per-task loop: task is a static jit argument, so
+    every (task, rung) pair — and every simulated-platform calibration —
+    is a fresh trace + XLA compile."""
+    legacy = jax.jit(mc._moments, static_argnums=(0, 1))
+    out = {}
+    for p in platforms:
+        for t_ in tasks:
+            recs = []
+            if hasattr(p, "moments"):  # simulated: per-task calibration
+                if t_.task_id not in p.moments._cache:
+                    s, s2 = legacy(t_, calib_paths, 10_007)
+                    res = mc._finalize(t_, s, s2, calib_paths)
+                    alpha = float(res.ci95) * (calib_paths ** 0.5)
+                    p.moments._cache[t_.task_id] = (float(res.price), alpha)
+                recs = [p.run(t_, int(n), seed=seed + i)
+                        for i, n in enumerate(ladder)]
+            else:  # local: warm + timed, per-task compile
+                for i, n in enumerate(ladder):
+                    legacy(t_, int(n), seed + i)  # warm — compiles per (task, n)
+                    t0 = time.perf_counter()
+                    s, s2 = legacy(t_, int(n), seed + i)
+                    s.block_until_ready()
+                    lat = time.perf_counter() - t0
+                    res = mc._finalize(t_, s, s2, int(n))
+                    recs.append(RunRecord(p.spec.name, t_.task_id, int(n),
+                                          float(res.price), float(res.ci95),
+                                          lat))
+            out[(p.spec.name, t_.task_id)] = fit_models(recs)
+    return out
+
+
+def bench_characterise(fast: bool = True) -> None:
+    """Batched vs looped characterisation wall time (the tentpole win).
+
+    The acceptance workload: 2 platforms x 16 tasks (3 families) x a
+    2-rung ladder.  The looped baseline pays one XLA compile per
+    (task, rung) plus one per simulated-platform calibration; the batched
+    engine compiles once per (model kind, batch size) because task
+    parameters, payoff kinds, seeds and path counts are all runtime
+    operands.
+    """
+    cats = [("BS-A", 6), ("BS-DB", 5), ("H-A", 5)] if fast else None
+    n_steps = 16 if fast else 256
+    calib = 8192
+    ladder = (512, 2048)
+    tasks = table1_workload(seed=11, n_steps=n_steps, categories=cats)
+
+    def cluster():
+        return [SimulatedPlatform(TABLE2_SPECS[0],
+                                  moments=_TaskMoments(calib_paths=calib)),
+                LocalJaxPlatform()]
+
+    with timer() as t_loop:
+        _looped_characterise(cluster(), tasks, ladder, calib_paths=calib)
+    mc.reset_trace_counts()
+    with timer() as t_batch:
+        characterise(cluster(), tasks, path_ladder=ladder)
+    traces = sum(mc.trace_counts().values())
+
+    speedup = t_loop.seconds / max(t_batch.seconds, 1e-9)
+    emit("characterise.looped_per_task", t_loop.us,
+         f"platforms=2;tasks={len(tasks)};rungs={len(ladder)}")
+    emit("characterise.batched_per_family", t_batch.us,
+         f"families={len(group_by_family(tasks))};traces={traces}")
+    print(json.dumps({
+        "benchmark": "characterise_batched_vs_looped",
+        "n_platforms": 2,
+        "n_tasks": len(tasks),
+        "n_families": len(group_by_family(tasks)),
+        "path_ladder": list(ladder),
+        "calib_paths": calib,
+        "looped_seconds": round(t_loop.seconds, 4),
+        "batched_seconds": round(t_batch.seconds, 4),
+        "speedup": round(speedup, 2),
+        "batched_traces": traces,
+    }), flush=True)
+
+
+def main(fast: bool = True) -> None:
+    bench_kernels()
+    bench_characterise(fast=fast)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Version-compat shims for the jax API surface this repo relies on.
+
+The repo targets the jax the container bakes in (0.4.x) while using the
+modern spellings where available, so the same source runs on both.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names: set[str] | None = None):
+    """``jax.shard_map`` with replication checking off, on any jax.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=...)``; 0.4.x only has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)`` (where all
+    mesh axes are manual by default, so ``axis_names`` is implicit).  The
+    check is disabled in both spellings for the same reason: our workers
+    derive varying values from ``axis_index``, which the static analysis
+    cannot see through.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs: dict[str, Any] = {"check_vma": False}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

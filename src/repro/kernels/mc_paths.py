@@ -35,21 +35,51 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.prng import normal_pair
 from repro.pricing.contracts import (
+    COL,
     BlackScholes,
     Heston,
     PricingTask,
+    TaskBatch,
+    bs_step_fn,
+    heston_step_fn,
     payoff_from_stats,
+    payoff_from_stats_coded,
 )
 
-__all__ = ["mc_moments_kernel_call", "SUBLANES", "LANES"]
+__all__ = [
+    "mc_moments_kernel_call", "mc_moments_batch_kernel_call",
+    "validate_blocking", "SUBLANES", "LANES", "DEFAULT_BLOCK_PATHS",
+]
 
 SUBLANES = 8
 LANES = 128
+
+#: The one path-tile default shared by every engine entry point
+#: (``mc.price``/``price_batch``, ``ops.mc_moments``, the kernel calls).
+#:
+#: VMEM trade-off: state per path is <= 6 f32 scalars (Heston: S, v, acc,
+#: mn, mx + a normal pair), so a 1024-path block is an (8, 128) VREG tile
+#: stack costing ~24 KiB of working set — far under the ~16 MiB/core VMEM
+#: budget, while already amortising grid overhead; larger tiles buy little
+#: until they start spilling registers, and smaller ones multiply dispatch
+#: overhead.  Tests/benchmarks sweep ``block_paths`` explicitly to probe
+#: the knee; production callers take this default.
+DEFAULT_BLOCK_PATHS = 1024
+
+
+def validate_blocking(n_paths: int, block_paths: int) -> int:
+    """The single divisibility check for path tiling; returns #blocks."""
+    if block_paths % LANES:
+        raise ValueError(f"block_paths={block_paths} must be a multiple of {LANES}")
+    if n_paths % block_paths:
+        raise ValueError(
+            f"n_paths={n_paths} must be a multiple of block_paths={block_paths}")
+    return n_paths // block_paths
 
 
 def _mc_kernel(o_ref, *, task: PricingTask, seed: int, block_paths: int,
@@ -75,33 +105,26 @@ def _mc_kernel(o_ref, *, task: PricingTask, seed: int, block_paths: int,
     spot = jnp.full((rows, LANES), jnp.float32(u.spot))
 
     if isinstance(u, BlackScholes):
-        drift = jnp.float32((u.rate - 0.5 * u.volatility**2) * dt)
-        vol = jnp.float32(u.volatility * np.sqrt(dt))
+        f = bs_step_fn(jnp.float32(u.rate), jnp.float32(u.volatility),
+                       jnp.float32(dt))
 
         def step(s_idx, state):
             s, acc, mn, mx = state
-            z, _ = normal_pair(k0, k1, pid, jnp.full_like(pid, s_idx))
-            s = s * jnp.exp(drift + vol * z)
+            z = normal_pair(k0, k1, pid, jnp.full_like(pid, s_idx))
+            s = f(s, z)
             return s, acc + s, jnp.minimum(mn, s), jnp.maximum(mx, s)
 
         init: Any = (spot, jnp.zeros_like(spot), spot, spot)
         s_t, acc, mn, mx = jax.lax.fori_loop(0, n_steps, step, init)
     else:
-        dt32 = jnp.float32(dt)
-        kappa, theta, xi = (jnp.float32(u.kappa), jnp.float32(u.theta),
-                            jnp.float32(u.xi))
-        rate, rho = jnp.float32(u.rate), jnp.float32(u.rho)
-        rho_c = jnp.float32(np.sqrt(1.0 - u.rho**2))
-        sqrt_dt = jnp.float32(np.sqrt(dt))
+        f = heston_step_fn(jnp.float32(u.rate), jnp.float32(u.kappa),
+                           jnp.float32(u.theta), jnp.float32(u.xi),
+                           jnp.float32(u.rho), jnp.float32(dt))
 
         def step(s_idx, state):
             s, v, acc, mn, mx = state
-            z_s, z2 = normal_pair(k0, k1, pid, jnp.full_like(pid, s_idx))
-            z_v = rho * z_s + rho_c * z2
-            v_plus = jnp.maximum(v, jnp.float32(0.0))
-            sqrt_v = jnp.sqrt(v_plus)
-            s = s * jnp.exp((rate - 0.5 * v_plus) * dt32 + sqrt_v * sqrt_dt * z_s)
-            v = v + kappa * (theta - v_plus) * dt32 + xi * sqrt_v * sqrt_dt * z_v
+            z = normal_pair(k0, k1, pid, jnp.full_like(pid, s_idx))
+            s, v = f((s, v), z)
             return s, v, acc + s, jnp.minimum(mn, s), jnp.maximum(mx, s)
 
         init = (spot, jnp.full((rows, LANES), jnp.float32(u.v0)),
@@ -115,17 +138,19 @@ def _mc_kernel(o_ref, *, task: PricingTask, seed: int, block_paths: int,
 
 
 def mc_moments_kernel_call(task: PricingTask, n_paths: int, seed: int,
-                           block_paths: int = 4096, interpret: bool = True):
+                           block_paths: int = DEFAULT_BLOCK_PATHS,
+                           interpret: bool = True):
     """pallas_call wrapper: returns per-block (sum, sumsq) of shape (blocks, 2).
 
     ``interpret=True`` executes the kernel body in Python on CPU (this
     container has no TPU); on real hardware pass ``interpret=False``.
+
+    This is the legacy single-task kernel (task baked in as a static trace
+    constant — one compile per task).  Production paths go through
+    :func:`mc_moments_batch_kernel_call`, which takes task parameters as
+    runtime SMEM operands and compiles once per task family.
     """
-    if block_paths % LANES:
-        raise ValueError(f"block_paths must be a multiple of {LANES}")
-    if n_paths % block_paths:
-        raise ValueError("n_paths must be a multiple of block_paths")
-    blocks = n_paths // block_paths
+    blocks = validate_blocking(n_paths, block_paths)
 
     kernel = functools.partial(
         _mc_kernel, task=task, seed=seed, block_paths=block_paths,
@@ -138,3 +163,113 @@ def mc_moments_kernel_call(task: PricingTask, n_paths: int, seed: int,
         out_shape=jax.ShapeDtypeStruct((blocks, 2), jnp.float32),
         interpret=interpret,
     )()
+
+
+# --------------------------------------------------------------------------
+# Batched runtime-parameter kernel: one compile per task family
+# --------------------------------------------------------------------------
+
+def _mc_batch_kernel(params_ref, tid_ref, kind_ref, nact_ref, seed_ref, o_ref,
+                     *, model_kind: str, block_paths: int, n_steps: int):
+    """One (task, path-block) grid step of the family-batched kernel.
+
+    Per-task scalars (spot, rate, dt, vol/Heston params, strike, barriers,
+    payout, call sign) arrive through an SMEM params ref whose BlockSpec is
+    indexed by ``pl.program_id(0)`` — they are *runtime operands*, so the
+    compiled kernel is shared by every task of the family.  The path tile
+    design is unchanged from the single-task kernel: a
+    (block_paths // LANES, LANES) stack of VREG rows resident for the whole
+    time loop, with only (sum, sumsq) leaving for HBM.
+
+    Paths with global id >= n_active (batch padding for ragged per-task
+    path counts) are simulated but masked out of the payoff sums, so each
+    task's moments are exactly those of its first n_active counter-based
+    draws — bit-identical in distribution to the per-task run.
+    """
+    rows = block_paths // LANES
+    block = pl.program_id(1)
+
+    base = block * block_paths
+    pid = (base
+           + jax.lax.broadcasted_iota(jnp.uint32, (rows, LANES), 0) * LANES
+           + jax.lax.broadcasted_iota(jnp.uint32, (rows, LANES), 1))
+    k0 = seed_ref[0]
+    k1 = tid_ref[0]
+
+    spot = jnp.full((rows, LANES), params_ref[0, COL["spot"]])
+    rate = params_ref[0, COL["rate"]]
+    dt = params_ref[0, COL["dt"]]
+
+    if model_kind == "black-scholes":
+        f = bs_step_fn(rate, params_ref[0, COL["vol"]], dt)
+
+        def step(s_idx, state):
+            s, acc, mn, mx = state
+            z = normal_pair(k0, k1, pid, jnp.full_like(pid, s_idx))
+            s = f(s, z)
+            return s, acc + s, jnp.minimum(mn, s), jnp.maximum(mx, s)
+
+        init: Any = (spot, jnp.zeros_like(spot), spot, spot)
+        s_t, acc, mn, mx = jax.lax.fori_loop(0, n_steps, step, init)
+    else:
+        f = heston_step_fn(rate, params_ref[0, COL["kappa"]],
+                           params_ref[0, COL["theta"]],
+                           params_ref[0, COL["xi"]],
+                           params_ref[0, COL["rho"]], dt)
+
+        def step(s_idx, state):
+            s, v, acc, mn, mx = state
+            z = normal_pair(k0, k1, pid, jnp.full_like(pid, s_idx))
+            s, v = f((s, v), z)
+            return s, v, acc + s, jnp.minimum(mn, s), jnp.maximum(mx, s)
+
+        init = (spot, jnp.full((rows, LANES), params_ref[0, COL["v0"]]),
+                jnp.zeros_like(spot), spot, spot)
+        s_t, _, acc, mn, mx = jax.lax.fori_loop(0, n_steps, step, init)
+
+    avg = acc / jnp.float32(n_steps)
+    pay = payoff_from_stats_coded(
+        s_t, avg, mn, mx,
+        strike=params_ref[0, COL["strike"]], lower=params_ref[0, COL["lower"]],
+        upper=params_ref[0, COL["upper"]], payout=params_ref[0, COL["payout"]],
+        call_sign=params_ref[0, COL["call_sign"]], kind=kind_ref[0])
+    pay = jnp.where(pid < nact_ref[0], pay, jnp.float32(0.0))
+    o_ref[0, 0, 0] = jnp.sum(pay)
+    o_ref[0, 0, 1] = jnp.sum(pay * pay)
+
+
+def mc_moments_batch_kernel_call(batch: TaskBatch, n_active, seed,
+                                 n_paths_max: int,
+                                 block_paths: int = DEFAULT_BLOCK_PATHS,
+                                 interpret: bool = True):
+    """Family-batched pallas_call over a 2-D grid (task, path_block).
+
+    ``n_active`` is a (T,) uint32 array of per-task path counts;
+    ``n_paths_max`` (a multiple of ``block_paths``) sets the padded grid.
+    ``seed`` is a (1,) uint32 array — a runtime operand, so re-seeding the
+    benchmark ladder never retraces.  Returns (T, blocks, 2) partial
+    (sum, sumsq) per (task, block).
+    """
+    blocks = validate_blocking(n_paths_max, block_paths)
+    T = batch.n_tasks
+
+    kernel = functools.partial(
+        _mc_batch_kernel, model_kind=batch.model_kind,
+        block_paths=block_paths, n_steps=batch.n_steps,
+    )
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kernel,
+        grid=(T, blocks),
+        in_specs=[
+            smem((1, len(COL)), lambda t, b: (t, 0)),  # params row
+            smem((1,), lambda t, b: (t,)),             # task_id
+            smem((1,), lambda t, b: (t,)),             # payoff kind
+            smem((1,), lambda t, b: (t,)),             # n_active
+            smem((1,), lambda t, b: (0,)),             # seed
+        ],
+        out_specs=pl.BlockSpec((1, 1, 2), lambda t, b: (t, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, blocks, 2), jnp.float32),
+        interpret=interpret,
+    )(batch.params, batch.task_ids, batch.payoff_kinds,
+      jnp.asarray(n_active, jnp.uint32), jnp.asarray(seed, jnp.uint32))

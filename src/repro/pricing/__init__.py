@@ -15,14 +15,28 @@ from .contracts import (  # noqa: F401
     Heston,
     Option,
     PricingTask,
+    TaskBatch,
     asian,
     barrier,
     digital_double_barrier,
     double_barrier,
     european,
+    family_key,
+    group_by_family,
+    group_by_launch,
+    launch_key,
     payoff_from_stats,
+    payoff_from_stats_coded,
 )
-from .mc import PriceResult, path_stats, price, price_sharded  # noqa: F401
+from .mc import (  # noqa: F401
+    PriceResult,
+    path_stats,
+    price,
+    price_batch,
+    price_sharded,
+    reset_trace_counts,
+    trace_counts,
+)
 from .platforms import (  # noqa: F401
     TABLE2_SPECS,
     LocalJaxPlatform,
@@ -32,8 +46,10 @@ from .platforms import (  # noqa: F401
     SimulatedPlatform,
     TaskPlatformModel,
     benchmark,
+    benchmark_batch,
     build_cluster,
     characterise,
+    dispatch_batch,
     kflop_per_path,
     model_matrices,
 )

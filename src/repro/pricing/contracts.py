@@ -19,14 +19,19 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Any, Sequence
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
-    "BlackScholes", "Heston",
+    "BlackScholes", "Heston", "bs_step_fn", "heston_step_fn",
     "EUROPEAN", "ASIAN", "BARRIER", "DOUBLE_BARRIER", "DIGITAL_DOUBLE_BARRIER",
     "Option", "european", "asian", "barrier", "double_barrier",
-    "digital_double_barrier", "payoff_from_stats", "PricingTask",
+    "digital_double_barrier", "payoff_from_stats", "payoff_from_stats_coded",
+    "PricingTask", "TaskBatch", "PARAM_COLS", "COL", "N_PARAMS",
+    "family_key", "group_by_family", "launch_key", "group_by_launch",
 ]
 
 
@@ -65,6 +70,50 @@ class Heston:
     rho: float
 
     kind: str = dataclasses.field(default="heston", init=False, repr=False)
+
+
+# --------------------------------------------------------------------------
+# Underlying dynamics — the single definition of each Euler step
+# --------------------------------------------------------------------------
+#
+# Scalar-parameterised step builders shared verbatim by the jnp oracle
+# (float operands), the batched engine (traced param-row scalars) and the
+# Pallas kernels (SMEM scalars) — so every backend integrates the identical
+# scheme and a future change cannot silently diverge one of them.
+
+def bs_step_fn(rate, vol, dt):
+    """GBM log-Euler step: ``step(s, (z, _)) -> s'``.  Pure jnp."""
+    drift = (rate - jnp.float32(0.5) * vol * vol) * dt
+    vol_dt = vol * jnp.sqrt(dt)
+
+    def step(s, z):
+        z_s, _ = z
+        return s * jnp.exp(drift + vol_dt * z_s)
+
+    return step
+
+
+def heston_step_fn(rate, kappa, theta, xi, rho, dt):
+    """Full-truncation Euler Heston step: ``step((s, v), (z_s, z2))``.
+
+    v is clamped at 0 inside drift and diffusion (the standard
+    bias/robustness trade-off); z2 is mixed into the vol shock via rho.
+    """
+    rho_c = jnp.sqrt(jnp.maximum(jnp.float32(1.0) - rho * rho, jnp.float32(0.0)))
+    sqrt_dt = jnp.sqrt(dt)
+
+    def step(carry, z):
+        s, v = carry
+        z_s, z2 = z
+        z_v = rho * z_s + rho_c * z2
+        v_plus = jnp.maximum(v, jnp.float32(0.0))
+        sqrt_v = jnp.sqrt(v_plus)
+        s_new = s * jnp.exp((rate - jnp.float32(0.5) * v_plus) * dt
+                            + sqrt_v * sqrt_dt * z_s)
+        v_new = v + kappa * (theta - v_plus) * dt + xi * sqrt_v * sqrt_dt * z_v
+        return (s_new, v_new)
+
+    return step
 
 
 # --------------------------------------------------------------------------
@@ -141,6 +190,35 @@ def payoff_from_stats(s_t, avg, mn, mx, option: Option):
     raise ValueError(f"unknown payoff {option.payoff}")
 
 
+def payoff_from_stats_coded(s_t, avg, mn, mx, strike, lower, upper, payout,
+                            call_sign, kind):
+    """Runtime-parameterised payoff: every contract field is a traced operand.
+
+    The batched engine's counterpart of :func:`payoff_from_stats` — the
+    payoff *kind* is an int32 code selected with ``jnp.where`` masking, so
+    one compiled computation serves any mix of Table 1 contracts.  All
+    operands broadcast (per-task scalars against per-path statistics), and
+    the same expression runs verbatim inside the Pallas kernel body (with
+    SMEM scalars) and the vmapped jnp oracle.  Payoff evaluation is a
+    handful of FLOPs against ~1e5 per path of simulation, so evaluating all
+    five branches and masking costs nothing measurable.
+    """
+    zero = jnp.float32(0.0)
+    vanilla = jnp.maximum(call_sign * (s_t - strike), zero)
+    asian_p = jnp.maximum(call_sign * (avg - strike), zero)
+    alive_up = mx < upper
+    alive = alive_up & (mn > lower)
+    return jnp.where(
+        kind == EUROPEAN, vanilla,
+        jnp.where(
+            kind == ASIAN, asian_p,
+            jnp.where(
+                kind == BARRIER, jnp.where(alive_up, vanilla, zero),
+                jnp.where(
+                    kind == DOUBLE_BARRIER, jnp.where(alive, vanilla, zero),
+                    jnp.where(alive, payout, zero)))))
+
+
 # --------------------------------------------------------------------------
 # Task = underlying + derivative + simulation spec
 # --------------------------------------------------------------------------
@@ -167,3 +245,138 @@ class PricingTask:
     @property
     def normals_per_step(self) -> int:
         return 2 if isinstance(self.underlying, Heston) else 1
+
+
+# --------------------------------------------------------------------------
+# Task families and struct-of-arrays batching
+# --------------------------------------------------------------------------
+#
+# The unit of *compilation* is the task family — (underlying model, payoff
+# family, n_steps), of which Table 1 has 9 — not the individual task.  All
+# per-task numbers (spot, rate, vol/Heston params, maturity-derived dt,
+# strike, barriers, payout, call sign) are packed into one (T, N_PARAMS)
+# f32 array and enter the compiled computation as *traced operands*, so two
+# workloads from the same family with the same batch shape share one XLA
+# executable.
+
+#: Column layout of ``TaskBatch.params`` — shared by the jnp oracle and the
+#: Pallas kernel (which reads them as SMEM scalars indexed by program id).
+PARAM_COLS: tuple[str, ...] = (
+    "spot", "rate", "dt",                        # simulation
+    "vol",                                       # Black-Scholes
+    "v0", "kappa", "theta", "xi", "rho",         # Heston
+    "strike", "lower", "upper", "payout",        # contract
+    "call_sign",
+)
+COL: dict[str, int] = {name: i for i, name in enumerate(PARAM_COLS)}
+N_PARAMS = len(PARAM_COLS)
+
+
+def family_key(task: PricingTask) -> tuple[str, int, int]:
+    """(model kind, payoff family, n_steps) — the Table 1 family key."""
+    return (task.underlying.kind, task.option.payoff, task.n_steps)
+
+
+def launch_key(task: PricingTask) -> tuple[str, int]:
+    """(model kind, n_steps) — the *compilation* grouping key.
+
+    Strictly coarser than :func:`family_key`: payoff kind is a runtime code
+    (see :func:`payoff_from_stats_coded`), so families differing only in
+    contract type share one compiled executable.  Only the step function
+    (BS vs Heston) and the loop bound are structural.
+    """
+    return (task.underlying.kind, task.n_steps)
+
+
+def _group_by(tasks: Sequence[PricingTask], key):
+    groups: dict[tuple, list[tuple[int, PricingTask]]] = {}
+    for i, t in enumerate(tasks):
+        groups.setdefault(key(t), []).append((i, t))
+    return list(groups.items())
+
+
+def group_by_family(tasks: Sequence[PricingTask]):
+    """Group task *indices* by Table 1 family, preserving first-seen order.
+
+    Returns ``[(family_key, [(index, task), ...]), ...]``.
+    """
+    return _group_by(tasks, family_key)
+
+
+def group_by_launch(tasks: Sequence[PricingTask]):
+    """Group task *indices* by compilation unit (model kind, n_steps)."""
+    return _group_by(tasks, launch_key)
+
+
+def _task_param_row(task: PricingTask) -> list[float]:
+    u = task.underlying
+    o = task.option
+    dt = task.maturity / task.n_steps
+    if isinstance(u, BlackScholes):
+        model = [u.volatility, 0.0, 0.0, 0.0, 0.0, 0.0]
+    else:
+        model = [0.0, u.v0, u.kappa, u.theta, u.xi, u.rho]
+    # float32(inf) upper barriers survive the cast; comparisons stay exact.
+    return [u.spot, u.rate, dt, *model,
+            o.strike, o.lower, o.upper, o.payout,
+            1.0 if o.call else -1.0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskBatch:
+    """Struct-of-arrays packing of a task family for one batched launch.
+
+    ``params``/``task_ids``/``payoff_kinds`` are runtime arrays (traced jit
+    operands); only ``model_kind`` and ``n_steps`` are static — they select
+    the step function and the loop bound, which is why a batch must be
+    family-uniform in those two.  Payoff kinds *may* mix within a batch
+    (they are runtime codes), but :func:`group_by_family` keeps launches
+    family-pure so the compile-count accounting matches the paper's ~9
+    Table 1 families.
+    """
+
+    params: Any        # (T, N_PARAMS) f32
+    task_ids: Any      # (T,) uint32 — RNG key half, unchanged convention
+    payoff_kinds: Any  # (T,) int32
+    model_kind: str    # static: "black-scholes" | "heston"
+    n_steps: int       # static: scan/loop bound
+
+    @property
+    def n_tasks(self) -> int:
+        return self.params.shape[0]
+
+    @classmethod
+    def from_tasks(cls, tasks: Sequence[PricingTask]) -> "TaskBatch":
+        if not tasks:
+            raise ValueError("empty task batch")
+        kinds = {t.underlying.kind for t in tasks}
+        steps = {t.n_steps for t in tasks}
+        if len(kinds) > 1 or len(steps) > 1:
+            raise ValueError(
+                f"TaskBatch must be family-uniform in (model, n_steps); "
+                f"got models={sorted(kinds)} n_steps={sorted(steps)}")
+        # Validate payoff codes here, while they are still concrete ints —
+        # the coded payoff's where-chain inside jit cannot raise, and an
+        # unknown code would otherwise silently price as the final branch.
+        bad = {t.option.payoff for t in tasks} - set(_PAYOFF_NAMES)
+        if bad:
+            raise ValueError(f"unknown payoff kinds {sorted(bad)}")
+        params = np.asarray([_task_param_row(t) for t in tasks], np.float32)
+        return cls(
+            params=jnp.asarray(params),
+            task_ids=jnp.asarray([t.task_id for t in tasks], jnp.uint32),
+            payoff_kinds=jnp.asarray([t.option.payoff for t in tasks], jnp.int32),
+            model_kind=next(iter(kinds)),
+            n_steps=next(iter(steps)),
+        )
+
+
+def _taskbatch_flatten(b: TaskBatch):
+    return (b.params, b.task_ids, b.payoff_kinds), (b.model_kind, b.n_steps)
+
+
+def _taskbatch_unflatten(aux, children):
+    return TaskBatch(*children, model_kind=aux[0], n_steps=aux[1])
+
+
+jax.tree_util.register_pytree_node(TaskBatch, _taskbatch_flatten, _taskbatch_unflatten)

@@ -31,12 +31,13 @@ from repro.core import (
     ml_allocation,
     proportional_allocation,
 )
-from .contracts import PricingTask
+from .contracts import PricingTask, launch_key
 from .platforms import (
     Platform,
     RunRecord,
     TaskPlatformModel,
     characterise as _characterise,
+    dispatch_batch,
     model_matrices,
 )
 
@@ -75,8 +76,9 @@ class PricingSolver:
 
     # -- step 2: characterisation ------------------------------------------
     def characterise(self, path_ladder: Sequence[int] | None = None,
-                     seed: int = 1) -> None:
-        self.models = _characterise(self.platforms, self.tasks, path_ladder, seed)
+                     seed: int = 1, batched: bool = True) -> None:
+        self.models = _characterise(self.platforms, self.tasks, path_ladder,
+                                    seed, batched=batched)
         self._delta, self._gamma = model_matrices(self.models, self.platforms, self.tasks)
 
     def problem(self, accuracy: float | np.ndarray) -> AllocationProblem:
@@ -105,6 +107,10 @@ class PricingSolver:
         var = {t.task_id: 0.0 for t in self.tasks}
 
         for i, p in enumerate(self.platforms):
+            # Collect this platform's supported shards, then issue one
+            # batched launch per compilation group (runtime-parameter
+            # batching: ragged n_ij within a group rides one executable).
+            shards: dict[tuple, list[tuple[PricingTask, int]]] = {}
             for j, t in enumerate(self.tasks):
                 share = A[i, j]
                 if share <= SUPPORT_ATOL:
@@ -112,13 +118,17 @@ class PricingSolver:
                 m = self.models[(p.spec.name, t.task_id)]
                 n_needed = m.accuracy.paths_for_accuracy(float(problem.c[j]))
                 n_ij = max(int(np.ceil(share * n_needed)), 64)
-                rec = p.run(t, n_ij, seed=seed)
-                records.append(rec)
-                plat_lat[p.spec.name] += rec.latency
-                num[t.task_id] += rec.n_paths * rec.price
-                den[t.task_id] += rec.n_paths
-                # pooled CI: ci^2 = sum (n_ij * ci_ij)^2 / n_tot^2
-                var[t.task_id] += (rec.n_paths * rec.ci95) ** 2
+                shards.setdefault(launch_key(t), []).append((t, n_ij))
+            for group in shards.values():
+                gtasks = [t for t, _ in group]
+                g_ns = [n for _, n in group]
+                for rec in dispatch_batch(p, gtasks, g_ns, seed=seed):
+                    records.append(rec)
+                    plat_lat[p.spec.name] += rec.latency
+                    num[rec.task_id] += rec.n_paths * rec.price
+                    den[rec.task_id] += rec.n_paths
+                    # pooled CI: ci^2 = sum (n_ij * ci_ij)^2 / n_tot^2
+                    var[rec.task_id] += (rec.n_paths * rec.ci95) ** 2
 
         prices = {tid: num[tid] / den[tid] for tid in num}
         measured_ci = {tid: float(np.sqrt(var[tid])) / den[tid] for tid in num}

@@ -111,11 +111,12 @@ def make_train_step(model, opt: AdamW, *, microbatches: int = 1,
             new_params, new_state, om = opt.update(grads, opt_state, params)
             return new_params, new_state, {"loss": loss, **om}
 
-        return jax.shard_map(
+        from repro import compat
+
+        return compat.shard_map(
             per_pod, mesh=mesh,
             in_specs=(P(), P(), P(axis)),
             out_specs=(P(), P(), P()),
-            check_vma=False,
             axis_names={axis},
         )(params, opt_state, batch)
 

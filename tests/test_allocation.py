@@ -1,6 +1,8 @@
 """Allocation-solver tests (paper §3.2/§4.3/§6): invariants + quality."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

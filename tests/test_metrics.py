@@ -1,6 +1,8 @@
 """Metric-model tests (paper §3.1/§4.2): fitting, prediction, properties."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

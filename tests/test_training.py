@@ -163,8 +163,9 @@ def test_compressed_psum_single_device():
     def f(g):
         return compressed_psum(g, "pod")
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(),),
-                                out_specs=P(), check_vma=False))(g)
+    from repro import compat
+    out = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(P(),),
+                                   out_specs=P()))(g)
     err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max()
     assert err <= 3.0 / 127 + 1e-6  # one quantisation bucket
 
