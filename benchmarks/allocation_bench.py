@@ -1,0 +1,78 @@
+"""Canonical allocation benchmark -> ``BENCH_allocation.json``.
+
+A fixed 16-task x 4-platform pricing instance (seeded Table 1 subset on
+seeded Table 2 rows) run through the full characterise -> allocate ->
+execute flow for all three solvers. The JSON is the perf-trajectory
+artifact tracked from PR 2 onward: solver makespans, solve times, and
+predicted-vs-measured model error on an instance that never changes.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit, timer
+
+#: Table 2 rows: Desktop, AWS Server EC1, Local GPU 1, Local FPGA 1 —
+#: one per latency/throughput regime so the instance is genuinely
+#: heterogeneous.
+PLATFORM_ROWS = (0, 4, 9, 14)
+N_TASKS = 16
+ACCURACY = 0.05
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_allocation.json")
+
+
+def main(fast: bool = True) -> None:
+    from repro.pricing import SimulatedPlatform, TABLE2_SPECS, table1_workload
+    from repro.pricing.platforms import _TaskMoments
+    from repro.runtime import Scheduler, make_domain
+
+    tasks = table1_workload(seed=2015, n_steps=64)[:N_TASKS]
+    moments = _TaskMoments(calib_paths=16384)
+    platforms = [SimulatedPlatform(TABLE2_SPECS[i], moments=moments, seed=7)
+                 for i in PLATFORM_ROWS]
+    sched = Scheduler(make_domain("pricing", tasks, platforms))
+
+    with timer() as t_char:
+        sched.characterise(seed=1, path_ladder=(1_024, 4_096, 16_384, 65_536))
+    emit("allocation.characterise", t_char.us,
+         f"pairs={len(platforms)}x{len(tasks)}")
+
+    solvers = {}
+    for method, kw in (("heuristic", {}),
+                       ("ml", dict(chains=16, steps=3000, rounds=1, seed=0,
+                                   time_limit=30 if fast else 600)),
+                       ("milp", dict(time_limit=30 if fast else 600))):
+        alloc = sched.allocate(ACCURACY, method=method, **kw)
+        rep = sched.execute(alloc, ACCURACY, seed=3)
+        solvers[method] = {
+            "makespan": alloc.makespan,
+            "solve_time_s": alloc.solve_time,
+            "predicted_makespan": rep.predicted_makespan,
+            "measured_makespan": rep.measured_makespan,
+            "prediction_error": rep.makespan_error,
+            "optimal": alloc.optimal,
+            "dual_bound": alloc.bound,
+        }
+        emit(f"allocation.{method}", alloc.solve_time * 1e6,
+             f"makespan={alloc.makespan:.4f};"
+             f"measured={rep.measured_makespan:.4f};"
+             f"model_err={rep.makespan_error:.3f}")
+
+    payload = {
+        "benchmark": "allocation_16x4",
+        "instance": {"tasks": N_TASKS, "platforms": len(platforms),
+                     "platform_rows": list(PLATFORM_ROWS),
+                     "accuracy": ACCURACY, "workload_seed": 2015,
+                     "ladder": [1_024, 4_096, 16_384, 65_536]},
+        "characterise_s": t_char.seconds,
+        "solvers": solvers,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    emit("allocation.json", 0.0, f"path={os.path.basename(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

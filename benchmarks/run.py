@@ -19,6 +19,7 @@ MODULES = [
     "fig7_synthetic_allocation",  # Fig 7 (+ Table 3)
     "fig810_practical_allocation",  # Figs 8 & 10
     "fig9_pareto",          # Fig 9
+    "allocation_bench",     # canonical 16x4 instance -> BENCH_allocation.json
     "kernel_bench",         # Pallas MC kernels
     "roofline_report",      # §Roofline (from dry-run artifacts)
 ]

@@ -15,7 +15,9 @@ from .allocation import (  # noqa: F401
     Allocation,
     AllocationProblem,
     check_allocation,
+    linear_work_reduction,
     makespan,
+    mc_work_reduction,
     platform_latencies,
 )
 from .annealing import anneal, lp_polish, ml_allocation  # noqa: F401

@@ -21,6 +21,7 @@ and :mod:`repro.core.milp`.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import numpy as np
 
@@ -30,6 +31,8 @@ __all__ = [
     "platform_latencies",
     "makespan",
     "check_allocation",
+    "mc_work_reduction",
+    "linear_work_reduction",
     "SUPPORT_ATOL",
 ]
 
@@ -38,18 +41,41 @@ __all__ = [
 SUPPORT_ATOL = 1e-9
 
 
+# -- quality -> work reductions ---------------------------------------------
+#
+# The allocation program only sees a work matrix W[i, j]: the latency of
+# running *all* of task j on platform i, excluding constants. How a task's
+# quality requirement c[j] maps onto W is a *domain* property: Monte Carlo
+# estimators obey the inverse-square law of eq. 9, while throughput domains
+# (e.g. LM token serving) measure quality directly in work units. Solvers
+# are agnostic — they only consume ``problem.work``.
+
+def mc_work_reduction(delta: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Monte Carlo domains (eq. 9): W = delta : c^2 (accuracy ~ n^-1/2)."""
+    return delta / (c * c)[None, :]
+
+
+def linear_work_reduction(delta: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Throughput domains: W = delta o c — c counts work units directly
+    (e.g. tokens to generate) and delta is seconds per unit."""
+    return delta * c[None, :]
+
+
 @dataclasses.dataclass(frozen=True)
 class AllocationProblem:
     """Work/constant matrices for one allocation instance.
 
     delta : (mu, tau)  combined-model coefficients (eq. 9) per (platform, task)
     gamma : (mu, tau)  per-(platform, task) constants
-    c     : (tau,)     required accuracies; W = delta / c**2
+    c     : (tau,)     required qualities (accuracies, token counts, ...)
+    reduction : (delta, c) -> W, the domain's quality->work map.
+                Defaults to the Monte Carlo inverse-square law W = delta/c^2.
     """
 
     delta: np.ndarray
     gamma: np.ndarray
     c: np.ndarray
+    reduction: Callable[[np.ndarray, np.ndarray], np.ndarray] = mc_work_reduction
 
     def __post_init__(self):
         delta = np.asarray(self.delta, dtype=np.float64)
@@ -75,9 +101,9 @@ class AllocationProblem:
 
     @property
     def work(self) -> np.ndarray:
-        """W = delta : c^2 — latency of the *whole* task j on platform i,
-        excluding constants."""
-        return self.delta / (self.c * self.c)[None, :]
+        """W = reduction(delta, c) — latency of the *whole* task j on
+        platform i, excluding constants."""
+        return self.reduction(self.delta, self.c)
 
     @property
     def full_latency(self) -> np.ndarray:

@@ -26,8 +26,15 @@ def proportional_allocation(problem: AllocationProblem) -> Allocation:
     t0 = time.perf_counter()
     ones = np.ones((problem.mu, problem.tau))
     L = platform_latencies(ones, problem)  # L = H_L(1, c)
-    inv = 1.0 / L
-    shares = inv / inv.sum()  # shares[i] = (L_i * sum_o 1/L_o)^-1
+    free = L <= 0.0
+    if free.any():
+        # Degenerate platform: an all-zero (delta, gamma) row means zero
+        # standalone latency and 1/L blows up. Such platforms are free, so
+        # snap to a uniform share across them (makespan 0 — optimal).
+        shares = free / free.sum()
+    else:
+        inv = 1.0 / L
+        shares = inv / inv.sum()  # shares[i] = (L_i * sum_o 1/L_o)^-1
     A = np.repeat(shares[:, None], problem.tau, axis=1)
     return Allocation(
         A=A,

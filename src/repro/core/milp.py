@@ -42,10 +42,8 @@ def _build_relaxed(problem: AllocationProblem):
     c[-1] = 1.0
 
     # sum_i A[i, j] == 1   (tau rows)
-    ii = np.tile(np.arange(tau), mu)
     jj = np.arange(n)  # A index for (i, j) = i * tau + j -> column j = idx % tau
     eq = sp.csr_matrix((np.ones(n), (jj % tau, jj)), shape=(tau, 2 * n + 1))
-    del ii
     eq_con = LinearConstraint(eq, lb=np.ones(tau), ub=np.ones(tau))
 
     # per-platform latency: W_i·A_i + G_i·B_i - G_L <= 0   (mu rows)

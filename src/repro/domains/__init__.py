@@ -1,0 +1,13 @@
+"""repro.domains — Domain implementations for the shared runtime.
+
+Each module is one self-contained front-end plugging a workload into
+:class:`repro.runtime.Scheduler`:
+
+    pricing     — derivatives pricing (paper §4): MC paths vs CI accuracy
+    lm_serving  — LM token serving: decode tokens vs generation length
+
+Import the domain class directly, or go through the registry:
+
+    from repro.runtime import make_domain
+    domain = make_domain("pricing", tasks, platforms)
+"""

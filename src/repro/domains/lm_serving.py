@@ -1,0 +1,306 @@
+"""LM token serving as a runtime :class:`Domain`.
+
+The second metric-modelled domain (paper §3/§7: the workflow generalises
+beyond pricing). A task is a batched generation request against one of the
+repo's model configurations (:mod:`repro.configs` + :mod:`repro.models`);
+the domain *variable* is the number of decoded tokens, and serving latency
+follows exactly the paper's eq. 7:
+
+    f_L(tokens) = beta * tokens + gamma
+
+with beta the per-token decode cost and gamma the constant part (prefill +
+dispatch for a local engine, network RTT for a remote one). The quality
+metric is the *generation length*: unlike the MC domain there is no
+estimator noise, so the quality->work reduction is linear (W = beta o c)
+rather than inverse-square — supplied to the solvers via
+:func:`repro.core.allocation.linear_work_reduction`. Requests are divisible
+the same way MC tasks are: a 64-token generation can be served as chunks
+on different platforms (speculative / segmented serving), which is what
+lets the same MILP/annealing/heuristic solvers allocate a mixed fleet.
+
+Two platform kinds mirror the pricing domain: ``LocalLMPlatform`` runs the
+real JAX engine (:class:`repro.launch.serve.ServeEngine`) with wall-clock
+latency; ``SimulatedLMPlatform`` replays a fleet spec from its two
+characteristics (application GFLOPS, network RTT) using the model's
+analytic FLOPs-per-token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.allocation import linear_work_reduction
+from repro.core.metrics import CombinedModel, LatencyModel, fit_latency_model
+from repro.runtime.domain import Domain, PlatformSpec
+
+__all__ = [
+    "LMRequest", "ServeRecord", "LMServingModel",
+    "LocalLMPlatform", "SimulatedLMPlatform",
+    "LM_FLEET_SPECS", "build_lm_fleet", "smoke_requests",
+    "LMServingDomain", "flops_per_token",
+]
+
+
+# --------------------------------------------------------------------------
+# Tasks
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMRequest:
+    """One batched generation request (divisible by generated tokens).
+
+    ``gen_tokens`` is the request's quality target — the domain's default
+    quality vector — and ``max_new_tokens`` bounds the KV cache so every
+    request family shares one compiled (prefill, decode) executable pair.
+    """
+
+    arch: str                 # repro.configs name, e.g. "qwen25_3b"
+    prompt_len: int
+    gen_tokens: int           # quality target: tokens to generate
+    batch: int = 1
+    max_new_tokens: int = 64
+    task_id: int = 0
+    smoke: bool = True        # reduced same-family config (CPU-friendly)
+
+    def __post_init__(self):
+        if not 1 <= self.gen_tokens <= self.max_new_tokens:
+            raise ValueError(
+                f"gen_tokens={self.gen_tokens} must be in "
+                f"[1, max_new_tokens={self.max_new_tokens}] — the KV cache "
+                "is sized for max_new_tokens and platforms cannot serve past it")
+
+    def config(self):
+        from repro.configs import get_config
+
+        cfg = get_config(self.arch)
+        return cfg.smoke() if self.smoke else cfg
+
+    @property
+    def max_seq(self) -> int:
+        return self.prompt_len + self.max_new_tokens + 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRecord:
+    """One executed generation shard."""
+
+    platform: str
+    task_id: int
+    n_tokens: int
+    latency: float            # seconds, prefill included
+    prefill_latency: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.n_tokens / max(self.latency, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMServingModel:
+    """Fitted per-(platform, request) metric model: eq. 7 on tokens.
+
+    The combined model is the latency model itself — quality *is* the
+    token count, so delta = beta and the work reduction is linear."""
+
+    latency: LatencyModel
+
+    @property
+    def combined(self) -> CombinedModel:
+        return CombinedModel(delta=self.latency.beta, gamma=self.latency.gamma)
+
+
+# --------------------------------------------------------------------------
+# FLOPs model (for simulated platforms)
+# --------------------------------------------------------------------------
+
+def flops_per_token(cfg, batch: int = 1) -> float:
+    """Decode FLOPs per generated token: the 2*N_active convention, per
+    batch element (a decode step advances the whole batch together)."""
+    _, active = cfg.param_count()
+    return 2.0 * active * batch
+
+
+# --------------------------------------------------------------------------
+# Platforms
+# --------------------------------------------------------------------------
+
+#: A small heterogeneous serving fleet, same schema as the paper's Table 2:
+#: application performance (GFLOPS, smoke-model scale) + network RTT. The
+#: spread is chosen so the constant term matters — the regime where the
+#: MILP/annealing solvers beat the proportional heuristic (§6.3).
+LM_FLEET_SPECS: list[PlatformSpec] = [
+    PlatformSpec("Edge Accelerator", "CPU", "embedded NPU", "on-prem",     2.0,   0.200),
+    PlatformSpec("Rack GPU",         "GPU", "rack server",  "on-prem",    50.0,   4.000),
+    PlatformSpec("Cloud GPU",        "GPU", "cloud vm",     "us-east",   200.0,  60.000),
+    PlatformSpec("Cloud Pod",        "GPU", "accelerator pod", "us-west", 800.0, 120.000),
+]
+
+
+class _LMPlatformBase:
+    """Shared platform plumbing: the token clamp and batched dispatch."""
+
+    spec: PlatformSpec
+
+    def _clamp(self, req: LMRequest, n_tokens: int) -> int:
+        # the KV cache is sized for max_new_tokens; never generate past it
+        return min(max(int(n_tokens), 1), req.max_new_tokens)
+
+    def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
+        raise NotImplementedError
+
+    def run_batch(self, reqs: Sequence[LMRequest], n_tokens,
+                  seed: int = 0) -> list[ServeRecord]:
+        return [self.run(r, n, seed=seed)
+                for r, n in zip(reqs, _as_token_list(reqs, n_tokens))]
+
+
+class LocalLMPlatform(_LMPlatformBase):
+    """Real platform: serves with the JAX engine, wall-clock latency.
+
+    Engines are cached per request family ((config, batch, prompt_len,
+    max_seq) — the compile unit), and warmed outside the timed region, so
+    gamma measures prefill + dispatch, not compilation."""
+
+    def __init__(self, name: str = "Local JAX LM", rtt_ms: float = 0.05):
+        self.spec = PlatformSpec(name, "CPU", "jax-cpu", "localhost",
+                                 gflops=float("nan"), rtt_ms=rtt_ms)
+        self._engines: dict[tuple, object] = {}
+
+    def _engine(self, req: LMRequest):
+        key = (req.arch, req.smoke, req.batch, req.prompt_len, req.max_seq)
+        eng = self._engines.get(key)
+        if eng is None:
+            from repro.launch.serve import ServeEngine
+
+            eng = ServeEngine(req.config(), batch=req.batch,
+                              prompt_len=req.prompt_len, max_seq=req.max_seq)
+            eng.warm()
+            self._engines[key] = eng
+        return eng
+
+    def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
+        n = self._clamp(req, n_tokens)
+        result = self._engine(req).generate(n, seed=seed)
+        return ServeRecord(self.spec.name, req.task_id, n,
+                           result.total_latency, result.prefill_latency)
+
+
+class SimulatedLMPlatform(_LMPlatformBase):
+    """Replays a fleet spec row from (GFLOPS, RTT) — the two published
+    characteristics that determine beta and gamma (§5.1.2):
+
+        latency(tokens) = (prefill + tokens) * flops_tok / GFLOPS
+                          + RTT + lognormal jitter
+    """
+
+    def __init__(self, spec: PlatformSpec, jitter: float = 0.02, seed: int = 0):
+        self.spec = spec
+        self.jitter = jitter
+        self._seed = seed
+
+    def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
+        n = self._clamp(req, n_tokens)
+        # stable across processes (unlike hash(): PYTHONHASHSEED randomises
+        # str hashing), so seeded runs reproduce exactly
+        key = zlib.crc32(f"{self.spec.name}/{req.task_id}/{n}/{seed}".encode())
+        rng = np.random.default_rng(key + self._seed)
+        ftok = flops_per_token(req.config(), req.batch)
+        prefill = req.prompt_len * ftok / (self.spec.gflops * 1e9)
+        decode = n * ftok / (self.spec.gflops * 1e9)
+        jitter = rng.lognormal(0.0, self.jitter)
+        latency = (prefill + decode + self.spec.rtt_ms * 1e-3) * jitter
+        return ServeRecord(self.spec.name, req.task_id, n, latency,
+                           prefill_latency=prefill * jitter)
+
+
+def _as_token_list(reqs: Sequence[LMRequest], n_tokens) -> list[int]:
+    return [int(n) for n in
+            np.broadcast_to(np.asarray(n_tokens, dtype=np.int64), (len(reqs),))]
+
+
+def build_lm_fleet(include_local: bool = True,
+                   specs: Sequence[PlatformSpec] | None = None) -> list:
+    """The evaluation fleet (optionally + the real local engine)."""
+    fleet: list = [SimulatedLMPlatform(s) for s in (specs or LM_FLEET_SPECS)]
+    if include_local:
+        fleet.append(LocalLMPlatform())
+    return fleet
+
+
+def smoke_requests(n: int = 4, arch: str = "qwen25_3b", batch: int = 2,
+                   prompt_len: int = 8, seed: int = 0) -> list[LMRequest]:
+    """A small single-family request workload (one compile unit)."""
+    rng = np.random.default_rng(seed)
+    return [LMRequest(arch=arch, prompt_len=prompt_len,
+                      gen_tokens=int(rng.integers(8, 25)), batch=batch,
+                      max_new_tokens=32, task_id=i)
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# The domain
+# --------------------------------------------------------------------------
+
+class LMServingDomain(Domain):
+    """LM token serving: decode tokens for a generation-length target."""
+
+    name = "lm_serving"
+    reduction = staticmethod(linear_work_reduction)
+    min_chunk = 1
+
+    #: default online-benchmarking ladder (token counts per rung).
+    TOKEN_LADDER: tuple[int, ...] = (2, 4, 8, 16)
+
+    # -- identity ----------------------------------------------------------
+
+    def launch_key(self, req: LMRequest):
+        # one compiled (prefill, decode) executable pair per family
+        return (req.arch, req.smoke, req.batch, req.prompt_len, req.max_seq)
+
+    def default_quality(self) -> np.ndarray:
+        return np.asarray([r.gen_tokens for r in self.tasks], dtype=np.float64)
+
+    # -- characterisation ---------------------------------------------------
+
+    def characterise_batch(self, platform, reqs: Sequence[LMRequest],
+                           seed: int = 1, token_ladder=None) -> list[list[ServeRecord]]:
+        # launch_key includes max_seq, so max_new_tokens is uniform within a
+        # group; clamp the ladder once and dedupe — repeated rungs at the cap
+        # would make the (beta, gamma) fit rank-deficient.
+        cap = min(r.max_new_tokens for r in reqs)
+        ladder = sorted({min(int(n), cap) for n in (token_ladder or self.TOKEN_LADDER)})
+        if len(ladder) < 2 and cap > 1:  # need 2 distinct points for eq. 7
+            ladder = sorted({max(1, cap // 2), cap})
+        return [platform.run_batch(reqs, n, seed=seed + i)
+                for i, n in enumerate(ladder)]
+
+    def fit_models(self, records: Sequence[ServeRecord]) -> LMServingModel:
+        lat = fit_latency_model([r.n_tokens for r in records],
+                                [r.latency for r in records])
+        return LMServingModel(latency=lat)
+
+    # -- execution ----------------------------------------------------------
+
+    def work_units(self, model: LMServingModel, quality: float) -> float:
+        return float(quality)  # quality is measured in work units (tokens)
+
+    def dispatch_batch(self, platform, reqs: Sequence[LMRequest],
+                       units: Sequence[int], seed: int = 0) -> list[ServeRecord]:
+        return platform.run_batch(reqs, units, seed=seed)
+
+    def summarise(self, records: Sequence[ServeRecord], problem) -> dict:
+        tokens = {r.task_id: 0 for r in self.tasks}
+        latency = {r.task_id: 0.0 for r in self.tasks}
+        for rec in records:
+            tokens[rec.task_id] += rec.n_tokens
+            latency[rec.task_id] += rec.latency
+        throughput = {tid: tokens[tid] / latency[tid] if latency[tid] > 0 else math.inf
+                      for tid in tokens}
+        requested = {t.task_id: float(problem.c[j])
+                     for j, t in enumerate(self.tasks)}
+        return {"tokens": tokens, "requested_tokens": requested,
+                "throughput_tok_s": throughput}

@@ -1,17 +1,115 @@
-"""Batched serving driver: prefill + decode with a KV cache.
+"""Batched serving engine + CLI driver: prefill + decode with a KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen25_3b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
 Serving latency decomposes exactly like the paper's eq. 7: a constant
-prefill cost (gamma) plus a per-token decode cost (beta x tokens); the
-driver fits the model online from its own measurements and prints the
-coefficients, which is what the fleet allocator consumes.
+prefill cost (gamma) plus a per-token decode cost (beta x tokens). The
+reusable :class:`ServeEngine` is what the LM-serving domain
+(:mod:`repro.domains.lm_serving`) drives as its local execution platform;
+the CLI fits the latency model online from its own measurements and prints
+the coefficients, which is what the fleet allocator consumes.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Any
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """One batched generation: wall-clock split + greedy tokens."""
+
+    prefill_latency: float          # seconds, one prefill of the whole batch
+    decode_latencies: list[float]   # seconds per decode step (len == gen)
+    tokens: Any                     # (batch, gen + 1) int32 greedy samples
+
+    @property
+    def total_latency(self) -> float:
+        return self.prefill_latency + sum(self.decode_latencies)
+
+
+class ServeEngine:
+    """Prefill + KV-cache decode engine for one model configuration.
+
+    Owns the params and the jitted prefill/decode executables. ``max_seq``
+    is fixed at construction so every ``generate`` call with
+    ``prompt_len + gen <= max_seq`` reuses the same two executables —
+    the engine analogue of the pricing engine's runtime-parameter batching
+    (the compile unit is the (config, batch, max_seq) family, not the
+    individual request).
+    """
+
+    def __init__(self, cfg, batch: int, prompt_len: int, max_seq: int | None = None,
+                 seed: int = 0):
+        import jax
+
+        from repro.models import build_model
+
+        if not cfg.has_decoder:
+            raise ValueError(f"{cfg.name} has no decoder; nothing to serve")
+        self.cfg = cfg
+        self.batch = batch
+        self.prompt_len = prompt_len
+        self.max_seq = max_seq or (prompt_len + 64)
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(lambda p, b: self.model.prefill(p, b, self.max_seq))
+        self._decode = jax.jit(self.model.decode_step)
+        self._warm = False
+
+    def _batch_inputs(self, seed: int):
+        from repro.data.pipeline import batch_for
+
+        return batch_for(self.cfg, self.batch, self.prompt_len, seed=seed)
+
+    def warm(self, seed: int = 0) -> None:
+        """Compile prefill + decode outside any timed region (the paper's
+        gamma measures dispatch, not code generation)."""
+        if self._warm:
+            return
+        import jax.numpy as jnp
+
+        batch = self._batch_inputs(seed)
+        cache, logits = self._prefill(self.params, batch)
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        _, logits = self._decode(self.params, cache, toks)
+        logits.block_until_ready()
+        self._warm = True
+
+    def generate(self, gen: int, seed: int = 0) -> GenerationResult:
+        """Greedy-decode ``gen`` tokens for one synthetic batch."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        if self.prompt_len + gen > self.max_seq:
+            raise ValueError(
+                f"prompt {self.prompt_len} + gen {gen} exceeds max_seq {self.max_seq}")
+        self.warm(seed)
+        batch = self._batch_inputs(seed)
+
+        t0 = time.perf_counter()
+        cache, logits = self._prefill(self.params, batch)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        generated = [np.asarray(toks)]
+        lat: list[float] = []
+        for _ in range(gen):
+            t0 = time.perf_counter()
+            cache, logits = self._decode(self.params, cache, toks)
+            toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            toks.block_until_ready()
+            lat.append(time.perf_counter() - t0)
+            generated.append(np.asarray(toks))
+        return GenerationResult(
+            prefill_latency=t_prefill,
+            decode_latencies=lat,
+            tokens=np.concatenate(generated, axis=1),
+        )
 
 
 def main(argv=None) -> int:
@@ -25,13 +123,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
     from repro.configs import get_config
     from repro.core.metrics import fit_latency_model
-    from repro.data.pipeline import batch_for
-    from repro.models import build_model
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -39,36 +133,19 @@ def main(argv=None) -> int:
     if not cfg.has_decoder:
         print(f"{args.arch} has no decoder; nothing to serve")
         return 0
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    max_seq = args.max_seq or (args.prompt_len + args.gen + 8)
 
-    batch = batch_for(cfg, args.batch, args.prompt_len, seed=args.seed)
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_seq))
-    decode = jax.jit(model.decode_step)
+    engine = ServeEngine(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                         max_seq=args.max_seq or (args.prompt_len + args.gen + 8),
+                         seed=args.seed)
+    result = engine.generate(args.gen, seed=args.seed)
 
-    t0 = time.perf_counter()
-    cache, logits = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-
-    toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    generated = [np.asarray(toks)]
-    lat = []
-    for i in range(args.gen):
-        t0 = time.perf_counter()
-        cache, logits = decode(params, cache, toks)
-        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        toks.block_until_ready()
-        lat.append(time.perf_counter() - t0)
-        generated.append(np.asarray(toks))
-
-    n = np.arange(1, len(lat) + 1)
-    cum = np.cumsum(lat)
-    lm = fit_latency_model(n[1:], cum[1:])  # drop the compile step
-    print(f"prefill: {t_prefill*1e3:.1f} ms for {args.batch}x{args.prompt_len}")
+    n = np.arange(1, len(result.decode_latencies) + 1)
+    cum = np.cumsum(result.decode_latencies)
+    lm = fit_latency_model(n, cum)
+    print(f"prefill: {result.prefill_latency*1e3:.1f} ms "
+          f"for {args.batch}x{args.prompt_len}")
     print(f"decode:  beta={lm.beta*1e3:.3f} ms/token-step, gamma={lm.gamma*1e3:.3f} ms")
-    print(f"sample output tokens[0]: {[int(g[0,0]) for g in generated[:8]]}")
+    print(f"sample output tokens[0]: {list(map(int, result.tokens[0, :8]))}")
     return 0
 
 

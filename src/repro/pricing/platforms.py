@@ -42,6 +42,7 @@ from repro.core.metrics import (
     fit_accuracy_model,
     fit_latency_model,
 )
+from repro.runtime.domain import PlatformSpec
 from .contracts import Heston, PricingTask, group_by_launch
 from . import mc
 
@@ -52,16 +53,6 @@ __all__ = [
     "benchmark_adaptive_batch", "characterise", "kflop_per_path",
     "build_cluster",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class PlatformSpec:
-    name: str
-    category: str        # CPU | GPU | FPGA
-    device: str
-    location: str
-    gflops: float        # Table 2 "Application Performance"
-    rtt_ms: float        # Table 2 "Network Round-trip Time"
 
 
 #: Paper Table 2, verbatim.

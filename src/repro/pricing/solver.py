@@ -8,46 +8,28 @@ This is the orchestration layer a domain user ("Julia") touches:
                             method="milp")
     report = solver.execute(alloc)              # evaluation, (5)
 
-``execute`` converts the allocation shares back into per-platform path
-counts through each platform's own fitted accuracy coefficient (this is
-exactly what delta[i,j] = beta_i * alpha_ij**2 encodes), runs every
-(platform, task) shard, pools the partial estimates inverse-variance
-style, and reports predicted vs measured makespan and accuracy — the
-quantities compared in the paper's Figs 8 & 10.
+Since the runtime refactor this class is a thin compatibility wrapper: the
+loop itself lives in the domain-agnostic :class:`repro.runtime.Scheduler`
+driving :class:`repro.domains.pricing.PricingDomain` — the same code path
+that serves every other domain (e.g. LM token serving). ``execute`` still
+returns the pricing-shaped :class:`ExecutionReport` (pooled prices,
+predicted vs measured CI and makespan — the paper's Figs 8 & 10
+quantities), unpacked from the scheduler's generic report.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Sequence
 
 import numpy as np
 
-from repro.core import (
-    Allocation,
-    AllocationProblem,
-    SUPPORT_ATOL,
-    makespan,
-    milp_allocation,
-    ml_allocation,
-    proportional_allocation,
-)
-from .contracts import PricingTask, launch_key
-from .platforms import (
-    Platform,
-    RunRecord,
-    TaskPlatformModel,
-    characterise as _characterise,
-    dispatch_batch,
-    model_matrices,
-)
+from repro.core import Allocation, AllocationProblem
+from repro.runtime import Scheduler
+from repro.runtime.scheduler import SOLVERS  # noqa: F401  (re-export, stable API)
+from .contracts import PricingTask
+from .platforms import Platform, RunRecord, TaskPlatformModel
 
 __all__ = ["PricingSolver", "ExecutionReport", "SOLVERS"]
-
-SOLVERS: dict[str, Callable[..., Allocation]] = {
-    "heuristic": lambda p, **kw: proportional_allocation(p),
-    "ml": lambda p, **kw: ml_allocation(p, **kw),
-    "milp": lambda p, **kw: milp_allocation(p, **kw),
-}
 
 
 @dataclasses.dataclass
@@ -68,79 +50,59 @@ class ExecutionReport:
 
 class PricingSolver:
     def __init__(self, tasks: Sequence[PricingTask], platforms: Sequence[Platform]):
-        self.tasks = list(tasks)
-        self.platforms = list(platforms)
-        self.models: dict[tuple[str, int], TaskPlatformModel] | None = None
-        self._delta: np.ndarray | None = None
-        self._gamma: np.ndarray | None = None
+        # Imported here: repro.pricing.__init__ imports this module before
+        # the package is fully initialised, and the domain adapter imports
+        # back into repro.pricing.
+        from repro.domains.pricing import PricingDomain
+
+        self.domain = PricingDomain(tasks, platforms)
+        self.scheduler = Scheduler(self.domain)
+
+    @property
+    def tasks(self) -> list[PricingTask]:
+        return self.domain.tasks
+
+    @property
+    def platforms(self) -> list[Platform]:
+        return self.domain.platforms
+
+    @property
+    def models(self) -> dict[tuple[str, int], TaskPlatformModel] | None:
+        return self.scheduler.models
+
+    @property
+    def _delta(self) -> np.ndarray | None:
+        return self.scheduler._delta
+
+    @property
+    def _gamma(self) -> np.ndarray | None:
+        return self.scheduler._gamma
 
     # -- step 2: characterisation ------------------------------------------
     def characterise(self, path_ladder: Sequence[int] | None = None,
                      seed: int = 1, batched: bool = True) -> None:
-        self.models = _characterise(self.platforms, self.tasks, path_ladder,
-                                    seed, batched=batched)
-        self._delta, self._gamma = model_matrices(self.models, self.platforms, self.tasks)
+        self.scheduler.characterise(seed=seed, path_ladder=path_ladder,
+                                    batched=batched)
 
     def problem(self, accuracy: float | np.ndarray) -> AllocationProblem:
-        if self._delta is None:
-            raise RuntimeError("characterise() first")
-        c = np.broadcast_to(np.asarray(accuracy, dtype=np.float64),
-                            (len(self.tasks),)).copy()
-        return AllocationProblem(delta=self._delta, gamma=self._gamma, c=c)
+        return self.scheduler.problem(accuracy)
 
     # -- steps 3-4: allocation ---------------------------------------------
     def allocate(self, accuracy: float | np.ndarray, method: str = "milp",
                  **solver_kw) -> Allocation:
-        return SOLVERS[method](self.problem(accuracy), **solver_kw)
+        return self.scheduler.allocate(accuracy, method=method, **solver_kw)
 
     # -- step 5: execution ---------------------------------------------------
     def execute(self, allocation: Allocation, accuracy: float | np.ndarray,
                 seed: int = 3) -> ExecutionReport:
-        assert self.models is not None
-        problem = self.problem(accuracy)
-        A = allocation.A
-        records: list[RunRecord] = []
-        plat_lat = {p.spec.name: 0.0 for p in self.platforms}
-        # per-task accumulators for pooled estimates
-        num = {t.task_id: 0.0 for t in self.tasks}
-        den = {t.task_id: 0.0 for t in self.tasks}
-        var = {t.task_id: 0.0 for t in self.tasks}
-
-        for i, p in enumerate(self.platforms):
-            # Collect this platform's supported shards, then issue one
-            # batched launch per compilation group (runtime-parameter
-            # batching: ragged n_ij within a group rides one executable).
-            shards: dict[tuple, list[tuple[PricingTask, int]]] = {}
-            for j, t in enumerate(self.tasks):
-                share = A[i, j]
-                if share <= SUPPORT_ATOL:
-                    continue
-                m = self.models[(p.spec.name, t.task_id)]
-                n_needed = m.accuracy.paths_for_accuracy(float(problem.c[j]))
-                n_ij = max(int(np.ceil(share * n_needed)), 64)
-                shards.setdefault(launch_key(t), []).append((t, n_ij))
-            for group in shards.values():
-                gtasks = [t for t, _ in group]
-                g_ns = [n for _, n in group]
-                for rec in dispatch_batch(p, gtasks, g_ns, seed=seed):
-                    records.append(rec)
-                    plat_lat[p.spec.name] += rec.latency
-                    num[rec.task_id] += rec.n_paths * rec.price
-                    den[rec.task_id] += rec.n_paths
-                    # pooled CI: ci^2 = sum (n_ij * ci_ij)^2 / n_tot^2
-                    var[rec.task_id] += (rec.n_paths * rec.ci95) ** 2
-
-        prices = {tid: num[tid] / den[tid] for tid in num}
-        measured_ci = {tid: float(np.sqrt(var[tid])) / den[tid] for tid in num}
-        predicted_ci = {t.task_id: float(problem.c[j])
-                        for j, t in enumerate(self.tasks)}
+        rep = self.scheduler.execute(allocation, accuracy, seed=seed)
         return ExecutionReport(
-            allocation=allocation,
-            predicted_makespan=makespan(A, problem),
-            measured_makespan=max(plat_lat.values()),
-            platform_latencies=plat_lat,
-            prices=prices,
-            predicted_ci=predicted_ci,
-            measured_ci=measured_ci,
-            records=records,
+            allocation=rep.allocation,
+            predicted_makespan=rep.predicted_makespan,
+            measured_makespan=rep.measured_makespan,
+            platform_latencies=rep.platform_latencies,
+            prices=rep.summary["prices"],
+            predicted_ci=rep.summary["predicted_ci"],
+            measured_ci=rep.summary["measured_ci"],
+            records=rep.records,
         )

@@ -1,0 +1,19 @@
+"""repro.runtime — the domain-agnostic allocation runtime.
+
+The characterise -> allocate -> execute workflow (paper Fig. 1) factored
+out of the pricing front-end: a :class:`Domain` protocol for workloads, a
+generic :class:`Scheduler` that drives the loop over the shared
+:mod:`repro.core` solvers, and a registry so new domains plug in by name.
+
+    from repro.runtime import Scheduler, make_domain
+    sched = Scheduler(make_domain("lm_serving", requests, fleet))
+    report = sched.run(method="milp")
+"""
+from .domain import Domain, PlatformSpec, RunRecordLike  # noqa: F401
+from .registry import (  # noqa: F401
+    available_domains,
+    domain_factory,
+    make_domain,
+    register_domain,
+)
+from .scheduler import SOLVERS, RuntimeReport, Scheduler  # noqa: F401

@@ -1,0 +1,159 @@
+"""The ``Domain`` protocol — what a workload must provide to be allocated.
+
+The paper's workflow (characterise -> allocate -> execute, Fig. 1) is not
+specific to derivatives pricing: any domain whose tasks are *divisible*
+(eq. 5) and whose run-time behaviour on a platform follows small parametric
+metric models (§3.1) can ride the same back-end. The companion work
+(arXiv:1408.4965) frames exactly this split: domain front-ends supply
+metric models and an execution hook; a shared runtime owns benchmarking,
+the allocation program and the evaluation loop.
+
+A concrete domain subclasses :class:`Domain` and provides
+
+* a task container (anything with a ``task_id``) and a platform list
+  (anything with a ``spec.name``),
+* ``characterise_batch`` — online benchmarking of a launch group on one
+  platform, returning one record list ("rung") per benchmark point,
+* ``fit_models`` — the per-metric model fitters, turning one task's rung
+  records into a model object exposing ``.combined`` (delta, gamma),
+* ``work_units`` — the quality -> work inversion (paths for a CI, tokens
+  for a generation length) used when shares are turned into launches,
+* ``dispatch_batch`` — the execution hook, and
+* ``reduction`` — the quality -> work-matrix map consumed by the solvers
+  (inverse-square for MC estimators, linear for throughput domains).
+
+Everything else — grouping, model matrices, the allocation program, solver
+selection, the execute/report loop — lives in :class:`repro.runtime.Scheduler`
+and is shared verbatim by every domain.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Hashable, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.allocation import mc_work_reduction
+
+__all__ = ["Domain", "PlatformSpec", "RunRecordLike"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """Static description of one execution platform (paper Table 2 row).
+
+    ``gflops``/``rtt_ms`` are the two published characteristics the paper
+    says determine beta and gamma respectively (§5.1.2); simulated
+    platforms of any domain replay their latency model from them.
+    """
+
+    name: str
+    category: str        # CPU | GPU | FPGA
+    device: str
+    location: str
+    gflops: float        # application performance
+    rtt_ms: float        # network round-trip time
+
+
+class RunRecordLike(Protocol):
+    """What the scheduler needs from an execution record.
+
+    Domains may carry extra fields (price, CI, token counts, ...) for
+    their own ``fit_models``/``summarise`` hooks.
+    """
+
+    platform: str
+    task_id: int
+    latency: float
+
+
+class Domain(abc.ABC):
+    """Base class for metric-modelled domains; see module docstring."""
+
+    #: registry name; subclasses override.
+    name: str = "domain"
+    #: quality -> work-matrix map handed to AllocationProblem.
+    reduction = staticmethod(mc_work_reduction)
+    #: smallest dispatchable work amount (paths, tokens, ...).
+    min_chunk: int = 1
+
+    def __init__(self, tasks: Sequence[Any], platforms: Sequence[Any]):
+        self.tasks = list(tasks)
+        self.platforms = list(platforms)
+
+    # -- identity ----------------------------------------------------------
+
+    def platform_name(self, platform) -> str:
+        return platform.spec.name
+
+    def launch_key(self, task) -> Hashable:
+        """Compilation/launch grouping key; one group = one batched launch.
+
+        Default: every task in its own group (no batching)."""
+        return task.task_id
+
+    def group_tasks(self, tasks: Sequence[Any]) -> list[tuple[Hashable, list[Any]]]:
+        groups: dict[Hashable, list[Any]] = {}
+        for t in tasks:
+            groups.setdefault(self.launch_key(t), []).append(t)
+        return list(groups.items())
+
+    def default_quality(self) -> np.ndarray | None:
+        """Per-task quality vector when the caller passes none.
+
+        Domains whose tasks carry an intrinsic quality target (e.g. an LM
+        request's generation length) override this; returning None makes
+        the quality argument mandatory."""
+        return None
+
+    # -- characterisation (paper §3.1.4) -----------------------------------
+
+    @abc.abstractmethod
+    def characterise_batch(self, platform, tasks: Sequence[Any],
+                           seed: int = 1, **kw) -> list[list[RunRecordLike]]:
+        """Benchmark one launch group on one platform.
+
+        Returns one record list per benchmark rung, each aligned with
+        ``tasks``."""
+
+    @abc.abstractmethod
+    def fit_models(self, records: Sequence[RunRecordLike]):
+        """Fit this domain's metric models from one task's rung records."""
+
+    def characterise(self, seed: int = 1, **kw) -> dict[tuple[str, int], Any]:
+        """Benchmark every (platform, task) pair and fit its models.
+
+        The generic loop: group tasks by launch key, climb each group's
+        benchmark ladder once per platform, fit per-task models from the
+        aligned rungs."""
+        out: dict[tuple[str, int], Any] = {}
+        groups = self.group_tasks(self.tasks)
+        for p in self.platforms:
+            for _key, gtasks in groups:
+                rungs = self.characterise_batch(p, gtasks, seed=seed, **kw)
+                for k, t in enumerate(gtasks):
+                    out[(self.platform_name(p), t.task_id)] = self.fit_models(
+                        [rung[k] for rung in rungs])
+        return out
+
+    def model_coefficients(self, model) -> tuple[float, float]:
+        """(delta, gamma) entries for the allocation matrices."""
+        combined = model.combined
+        return float(combined.delta), float(combined.gamma)
+
+    # -- execution ---------------------------------------------------------
+
+    @abc.abstractmethod
+    def work_units(self, model, quality: float) -> float:
+        """Total work units task needs at ``quality`` (eq. 8 inverted for
+        MC; identity for domains measuring quality in work units)."""
+
+    @abc.abstractmethod
+    def dispatch_batch(self, platform, tasks: Sequence[Any],
+                       units: Sequence[int], seed: int = 0) -> list[RunRecordLike]:
+        """Execute a (task, units) shard list on a platform."""
+
+    def summarise(self, records: Sequence[RunRecordLike], problem) -> dict:
+        """Domain-specific result pooling (estimates, achieved quality...)."""
+        return {}

@@ -1,0 +1,52 @@
+"""Domain registry: name -> Domain factory.
+
+Built-in domains are registered lazily by import path so that importing
+:mod:`repro.runtime` stays cheap (the LM domain pulls in the model zoo;
+the pricing domain pulls in the MC engine).
+
+    from repro.runtime import make_domain
+    domain = make_domain("pricing", tasks, platforms)
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+from .domain import Domain
+
+__all__ = ["register_domain", "domain_factory", "make_domain", "available_domains"]
+
+#: name -> "module.path:ClassName" for domains shipped with the repo.
+_BUILTIN: dict[str, str] = {
+    "pricing": "repro.domains.pricing:PricingDomain",
+    "lm_serving": "repro.domains.lm_serving:LMServingDomain",
+}
+
+_REGISTRY: dict[str, Callable[..., Domain]] = {}
+
+
+def register_domain(name: str, factory: Callable[..., Domain]) -> None:
+    """Register a domain factory (usually the Domain subclass itself)."""
+    _REGISTRY[name] = factory
+
+
+def domain_factory(name: str) -> Callable[..., Domain]:
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    path = _BUILTIN.get(name)
+    if path is None:
+        raise KeyError(
+            f"unknown domain {name!r}; available: {sorted(available_domains())}")
+    mod_name, _, attr = path.partition(":")
+    factory = getattr(importlib.import_module(mod_name), attr)
+    _REGISTRY[name] = factory
+    return factory
+
+
+def make_domain(name: str, *args, **kw) -> Domain:
+    """Instantiate a registered domain by name."""
+    return domain_factory(name)(*args, **kw)
+
+
+def available_domains() -> list[str]:
+    return sorted(set(_BUILTIN) | set(_REGISTRY))

@@ -1,0 +1,173 @@
+"""The domain-agnostic scheduler: one back-end for every metric-modelled
+domain (paper Fig. 1; companion work arXiv:1408.4965).
+
+    domain = PricingDomain(tasks, platforms)        # or LMServingDomain(...)
+    sched = Scheduler(domain)
+    sched.characterise()                            # online benchmarking, (2)
+    alloc = sched.allocate(quality, method="milp")  # trade-off selection, (3-4)
+    report = sched.execute(alloc, quality)          # evaluation, (5)
+
+The scheduler owns everything that is *not* domain knowledge: building the
+(delta, gamma) model matrices, the :class:`AllocationProblem`, solver
+dispatch (heuristic / ML / MILP from :mod:`repro.core`, reused unchanged),
+converting allocation shares back into per-platform work via the domain's
+quality->work inversion, batched dispatch per launch group, and the
+predicted-vs-measured makespan report (the paper's Figs 8 & 10 quantities).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import (
+    Allocation,
+    AllocationProblem,
+    SUPPORT_ATOL,
+    makespan,
+    milp_allocation,
+    ml_allocation,
+    proportional_allocation,
+)
+from .domain import Domain, RunRecordLike
+
+__all__ = ["Scheduler", "RuntimeReport", "SOLVERS"]
+
+#: The three allocation approaches of §4.3, shared by every domain.
+SOLVERS: dict[str, Callable[..., Allocation]] = {
+    "heuristic": lambda p, **kw: proportional_allocation(p),
+    "ml": lambda p, **kw: ml_allocation(p, **kw),
+    "milp": lambda p, **kw: milp_allocation(p, **kw),
+}
+
+
+@dataclasses.dataclass
+class RuntimeReport:
+    """Outcome of one execute pass: makespans + domain summary."""
+
+    allocation: Allocation
+    predicted_makespan: float
+    measured_makespan: float
+    platform_latencies: dict[str, float]
+    records: list[RunRecordLike]
+    summary: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def makespan_error(self) -> float:
+        return abs(self.predicted_makespan - self.measured_makespan) / self.measured_makespan
+
+
+class Scheduler:
+    """Runs one domain's workload through the shared allocation back-end."""
+
+    def __init__(self, domain: Domain):
+        self.domain = domain
+        self.models: dict[tuple[str, int], Any] | None = None
+        self._delta: np.ndarray | None = None
+        self._gamma: np.ndarray | None = None
+
+    @property
+    def tasks(self) -> list:
+        return self.domain.tasks
+
+    @property
+    def platforms(self) -> list:
+        return self.domain.platforms
+
+    # -- step 2: characterisation ------------------------------------------
+
+    def characterise(self, seed: int = 1, **kw) -> None:
+        self.models = self.domain.characterise(seed=seed, **kw)
+        self._delta, self._gamma = self.model_matrices()
+
+    def model_matrices(self) -> tuple[np.ndarray, np.ndarray]:
+        """(delta, gamma) matrices ordered [platform, task]."""
+        assert self.models is not None, "characterise() first"
+        mu, tau = len(self.platforms), len(self.tasks)
+        delta = np.zeros((mu, tau))
+        gamma = np.zeros((mu, tau))
+        for i, p in enumerate(self.platforms):
+            pname = self.domain.platform_name(p)
+            for j, t in enumerate(self.tasks):
+                d, g = self.domain.model_coefficients(self.models[(pname, t.task_id)])
+                delta[i, j] = d
+                gamma[i, j] = g
+        return delta, gamma
+
+    # -- steps 3-4: allocation ---------------------------------------------
+
+    def quality_vector(self, quality=None) -> np.ndarray:
+        if quality is None:
+            quality = self.domain.default_quality()
+            if quality is None:
+                raise ValueError(
+                    f"domain {self.domain.name!r} has no default quality; "
+                    "pass one explicitly")
+        return np.broadcast_to(np.asarray(quality, dtype=np.float64),
+                               (len(self.tasks),)).copy()
+
+    def problem(self, quality=None) -> AllocationProblem:
+        if self._delta is None:
+            raise RuntimeError("characterise() first")
+        return AllocationProblem(delta=self._delta, gamma=self._gamma,
+                                 c=self.quality_vector(quality),
+                                 reduction=self.domain.reduction)
+
+    def allocate(self, quality=None, method: str = "milp", **solver_kw) -> Allocation:
+        return SOLVERS[method](self.problem(quality), **solver_kw)
+
+    # -- step 5: execution --------------------------------------------------
+
+    def shards(self, allocation: Allocation,
+               problem: AllocationProblem) -> list[tuple[Any, list[tuple[Any, int]]]]:
+        """Turn allocation shares into per-platform (task, units) launch
+        groups via the domain's quality->work inversion."""
+        assert self.models is not None
+        A = allocation.A
+        out = []
+        for i, p in enumerate(self.platforms):
+            pname = self.domain.platform_name(p)
+            groups: dict = {}
+            for j, t in enumerate(self.tasks):
+                share = A[i, j]
+                if share <= SUPPORT_ATOL:
+                    continue
+                model = self.models[(pname, t.task_id)]
+                total = self.domain.work_units(model, float(problem.c[j]))
+                units = max(int(np.ceil(share * total)), self.domain.min_chunk)
+                groups.setdefault(self.domain.launch_key(t), []).append((t, units))
+            out.append((p, list(groups.values())))
+        return out
+
+    def execute(self, allocation: Allocation, quality=None,
+                seed: int = 3) -> RuntimeReport:
+        problem = self.problem(quality)
+        records: list[RunRecordLike] = []
+        plat_lat = {self.domain.platform_name(p): 0.0 for p in self.platforms}
+        for p, groups in self.shards(allocation, problem):
+            pname = self.domain.platform_name(p)
+            for group in groups:
+                gtasks = [t for t, _ in group]
+                g_units = [u for _, u in group]
+                for rec in self.domain.dispatch_batch(p, gtasks, g_units, seed=seed):
+                    records.append(rec)
+                    plat_lat[pname] += rec.latency
+        return RuntimeReport(
+            allocation=allocation,
+            predicted_makespan=makespan(allocation.A, problem),
+            measured_makespan=max(plat_lat.values()),
+            platform_latencies=plat_lat,
+            records=records,
+            summary=self.domain.summarise(records, problem),
+        )
+
+    # -- convenience: the whole Fig. 1 flow --------------------------------
+
+    def run(self, quality=None, method: str = "milp", seed: int = 3,
+            characterise_kw: dict | None = None, **solver_kw) -> RuntimeReport:
+        """characterise (if needed) -> allocate -> execute in one call."""
+        if self.models is None:
+            self.characterise(**(characterise_kw or {}))
+        alloc = self.allocate(quality, method=method, **solver_kw)
+        return self.execute(alloc, quality, seed=seed)

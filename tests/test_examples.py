@@ -30,6 +30,15 @@ def test_serve_lm():
 
 
 @pytest.mark.slow
+def test_allocate_lm_fleet():
+    r = run(["examples/allocate_lm_fleet.py", "--requests", "2"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    for solver in ("heuristic", "ml", "milp"):
+        assert solver in r.stdout
+    assert "tokens served vs requested" in r.stdout
+
+
+@pytest.mark.slow
 def test_train_driver_straggler_and_loss():
     r = run(["-m", "repro.launch.train", "--arch", "qwen25_3b", "--smoke",
              "--steps", "12", "--batch", "2", "--seq", "16",

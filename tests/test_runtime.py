@@ -1,0 +1,290 @@
+"""Runtime-subsystem tests: Domain protocol, Scheduler, registry, and the
+two shipped domains (pricing parity + LM serving end-to-end)."""
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocationProblem,
+    linear_work_reduction,
+    mc_work_reduction,
+)
+from repro.runtime import (
+    Scheduler,
+    available_domains,
+    make_domain,
+    register_domain,
+)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_lists_builtin_domains():
+    names = available_domains()
+    assert "pricing" in names and "lm_serving" in names
+
+
+def test_registry_unknown_domain_raises():
+    with pytest.raises(KeyError, match="unknown domain"):
+        make_domain("definitely-not-a-domain")
+
+
+def test_registry_custom_domain_roundtrip():
+    from repro.runtime import registry
+
+    marker = types.SimpleNamespace(calls=[])
+
+    def factory(*args, **kw):
+        marker.calls.append((args, kw))
+        return marker
+
+    register_domain("_test_domain", factory)
+    try:
+        assert "_test_domain" in available_domains()
+        assert make_domain("_test_domain", 1, flag=True) is marker
+        assert marker.calls == [((1,), {"flag": True})]
+    finally:  # the registry is process-global; don't leak into other tests
+        registry._REGISTRY.pop("_test_domain", None)
+
+
+# ---------------------------------------------------------------- reductions
+
+def test_work_reductions():
+    delta = np.array([[2.0, 4.0], [1.0, 8.0]])
+    c = np.array([0.5, 2.0])
+    np.testing.assert_allclose(mc_work_reduction(delta, c),
+                               [[8.0, 1.0], [4.0, 2.0]])
+    np.testing.assert_allclose(linear_work_reduction(delta, c),
+                               [[1.0, 8.0], [0.5, 16.0]])
+
+
+def test_allocation_problem_uses_domain_reduction():
+    delta = np.array([[2.0, 4.0]])
+    gamma = np.zeros((1, 2))
+    c = np.array([0.5, 2.0])
+    mc = AllocationProblem(delta=delta, gamma=gamma, c=c)
+    lin = AllocationProblem(delta=delta, gamma=gamma, c=c,
+                            reduction=linear_work_reduction)
+    np.testing.assert_allclose(mc.work, [[8.0, 1.0]])
+    np.testing.assert_allclose(lin.work, [[1.0, 8.0]])
+
+
+# ------------------------------------------------- pricing: pooled CI maths
+
+def test_pricing_pooled_inverse_variance_ci():
+    """execute's pooling: path-weighted mean + ci^2 = sum (n ci)^2 / N^2."""
+    from repro.domains.pricing import PricingDomain
+    from repro.pricing.platforms import RunRecord
+
+    task = types.SimpleNamespace(task_id=7)
+    domain = PricingDomain([task], platforms=[])
+    problem = AllocationProblem(delta=np.ones((1, 1)), gamma=np.zeros((1, 1)),
+                                c=np.array([0.05]))
+    records = [
+        RunRecord("a", 7, n_paths=100, price=1.0, ci95=0.4, latency=0.1),
+        RunRecord("b", 7, n_paths=300, price=2.0, ci95=0.2, latency=0.1),
+    ]
+    out = domain.summarise(records, problem)
+    assert out["prices"][7] == pytest.approx((100 * 1.0 + 300 * 2.0) / 400)
+    expect_ci = np.sqrt((100 * 0.4) ** 2 + (300 * 0.2) ** 2) / 400
+    assert out["measured_ci"][7] == pytest.approx(expect_ci)
+    assert out["predicted_ci"][7] == pytest.approx(0.05)
+
+
+def test_pricing_pooled_ci_single_shard_is_identity():
+    """Pooling one shard must return its own estimate verbatim."""
+    from repro.domains.pricing import PricingDomain
+    from repro.pricing.platforms import RunRecord
+
+    task = types.SimpleNamespace(task_id=0)
+    domain = PricingDomain([task], platforms=[])
+    problem = AllocationProblem(delta=np.ones((1, 1)), gamma=np.zeros((1, 1)),
+                                c=np.array([0.1]))
+    rec = RunRecord("a", 0, n_paths=1000, price=3.25, ci95=0.07, latency=0.1)
+    out = domain.summarise([rec], problem)
+    assert out["prices"][0] == pytest.approx(3.25)
+    assert out["measured_ci"][0] == pytest.approx(0.07)
+
+
+# ------------------------------------------- pricing: scheduler parity
+
+def _pricing_fixture():
+    from repro.pricing import SimulatedPlatform, TABLE2_SPECS, table1_workload
+    from repro.pricing.platforms import _TaskMoments
+
+    tasks = table1_workload(seed=12, n_steps=8,
+                            categories=[("BS-A", 2), ("H-A", 2)])
+    moments = _TaskMoments(calib_paths=4096)
+    platforms = [SimulatedPlatform(TABLE2_SPECS[0], moments=moments),
+                 SimulatedPlatform(TABLE2_SPECS[9], moments=moments)]
+    return tasks, platforms
+
+
+def test_scheduler_matches_legacy_characterise():
+    """The generic Domain.characterise loop reproduces the pricing layer's
+    batched characterisation exactly (same grouping, ladders, seeds)."""
+    from repro.pricing.platforms import characterise as legacy_characterise
+
+    tasks, platforms = _pricing_fixture()
+    ladder = (512, 2048)
+    sched = Scheduler(make_domain("pricing", tasks, platforms))
+    sched.characterise(seed=1, path_ladder=ladder)
+    legacy = legacy_characterise(platforms, tasks, ladder, seed=1, batched=True)
+    assert set(sched.models) == set(legacy)
+    for key, model in sched.models.items():
+        assert model.latency.beta == pytest.approx(legacy[key].latency.beta)
+        assert model.accuracy.alpha == pytest.approx(legacy[key].accuracy.alpha)
+
+
+def test_scheduler_run_convenience_pricing():
+    tasks, platforms = _pricing_fixture()
+    sched = Scheduler(make_domain("pricing", tasks, platforms))
+    rep = sched.run(quality=0.5, method="heuristic",
+                    characterise_kw=dict(seed=1, path_ladder=(512, 2048)))
+    assert rep.measured_makespan > 0
+    assert set(rep.summary["prices"]) == {t.task_id for t in tasks}
+
+
+def test_pricing_solver_wrapper_exposes_models():
+    """Compatibility surface: .models, .tasks, .platforms, problem()."""
+    from repro.pricing import PricingSolver
+
+    tasks, platforms = _pricing_fixture()
+    solver = PricingSolver(tasks, platforms)
+    assert solver.models is None
+    with pytest.raises(RuntimeError, match="characterise"):
+        solver.problem(0.5)
+    solver.characterise(path_ladder=(512, 2048), seed=1)
+    assert len(solver.models) == len(platforms) * len(tasks)
+    p = solver.problem(0.5)
+    assert p.delta.shape == (len(platforms), len(tasks))
+    assert p.reduction is mc_work_reduction
+
+
+# --------------------------------------------------- LM serving end-to-end
+
+@pytest.fixture(scope="module")
+def lm_sched():
+    from repro.domains.lm_serving import build_lm_fleet, smoke_requests
+
+    reqs = smoke_requests(3, arch="qwen25_3b")
+    fleet = build_lm_fleet(include_local=True)
+    sched = Scheduler(make_domain("lm_serving", reqs, fleet))
+    sched.characterise(seed=1, token_ladder=(2, 4, 8))
+    return sched
+
+
+def test_lm_serving_characterise_fits_eq7(lm_sched):
+    """Every (platform, request) pair gets a sane latency model."""
+    reqs, fleet = lm_sched.tasks, lm_sched.platforms
+    assert len(lm_sched.models) == len(fleet) * len(reqs)
+    for model in lm_sched.models.values():
+        assert model.latency.beta > 0
+        assert model.latency.gamma >= 0
+    delta, gamma = lm_sched.model_matrices()
+    assert (delta > 0).all() and (gamma >= 0).all()
+
+
+def test_lm_serving_simulated_beta_matches_flops_model():
+    """Online benchmarking recovers a simulated platform's true beta."""
+    from repro.core.metrics import fit_latency_model
+    from repro.domains.lm_serving import (
+        LM_FLEET_SPECS,
+        SimulatedLMPlatform,
+        flops_per_token,
+        smoke_requests,
+    )
+
+    (req,) = smoke_requests(1)
+    spec = LM_FLEET_SPECS[0]  # Edge Accelerator: beta-dominated
+    platform = SimulatedLMPlatform(spec, jitter=1e-4)
+    recs = [platform.run(req, n, seed=i) for i, n in enumerate((4, 8, 16, 32))]
+    lat = fit_latency_model([r.n_tokens for r in recs],
+                            [r.latency for r in recs])
+    beta_true = flops_per_token(req.config(), req.batch) / (spec.gflops * 1e9)
+    assert lat.beta == pytest.approx(beta_true, rel=0.05)
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("heuristic", {}),
+    ("ml", dict(chains=8, steps=800, rounds=1, seed=0)),
+    ("milp", dict(time_limit=20)),
+])
+def test_lm_serving_all_solvers_end_to_end(lm_sched, method, kw):
+    """Acceptance: the smoke LM workload is allocated by every solver and
+    executed with predicted-vs-measured makespan reported."""
+    alloc = lm_sched.allocate(method=method, **kw)
+    rep = lm_sched.execute(alloc)
+    assert rep.predicted_makespan > 0
+    assert rep.measured_makespan > 0
+    assert np.isfinite(rep.makespan_error)
+    # every request is fully served: tokens >= its generation target
+    for req in lm_sched.tasks:
+        assert rep.summary["tokens"][req.task_id] >= req.gen_tokens
+    # per-platform latencies account for the measured makespan
+    assert rep.measured_makespan == pytest.approx(
+        max(rep.platform_latencies.values()))
+
+
+def test_lm_serving_milp_beats_heuristic(lm_sched):
+    """Constants (RTT/prefill) dominate at smoke scale — the regime where
+    the optimising solvers win (paper §6.3), now in the second domain."""
+    h = lm_sched.allocate(method="heuristic")
+    m = lm_sched.allocate(method="milp", time_limit=20)
+    assert m.makespan <= h.makespan * (1 + 1e-6)
+
+
+def test_lm_serving_uses_linear_reduction(lm_sched):
+    problem = lm_sched.problem()
+    assert problem.reduction is linear_work_reduction
+    # default quality comes from the requests' generation targets
+    np.testing.assert_allclose(problem.c,
+                               [r.gen_tokens for r in lm_sched.tasks])
+    # W = beta o c: doubling requested tokens doubles work, not x4
+    doubled = lm_sched.problem(problem.c * 2)
+    np.testing.assert_allclose(doubled.work, problem.work * 2)
+
+
+def test_lm_characterise_ladder_clamps_without_degenerating():
+    """A small max_new_tokens must clamp the token ladder to *distinct*
+    rungs — duplicate points would make the (beta, gamma) fit
+    rank-deficient and misattribute the RTT constant to the slope."""
+    from repro.domains.lm_serving import (
+        LM_FLEET_SPECS,
+        LMRequest,
+        LMServingDomain,
+        SimulatedLMPlatform,
+    )
+
+    req = LMRequest("qwen25_3b", prompt_len=8, gen_tokens=2, max_new_tokens=2,
+                    task_id=0)
+    platform = SimulatedLMPlatform(LM_FLEET_SPECS[2], jitter=1e-4)  # RTT-heavy
+    domain = LMServingDomain([req], [platform])
+    rungs = domain.characterise_batch(platform, [req], seed=1)
+    ns = [rung[0].n_tokens for rung in rungs]
+    assert len(set(ns)) == len(ns) >= 2
+    model = domain.fit_models([rung[0] for rung in rungs])
+    # the 60ms RTT must land in gamma, not beta
+    assert model.latency.gamma == pytest.approx(
+        LM_FLEET_SPECS[2].rtt_ms * 1e-3, rel=0.2)
+
+
+def test_lm_request_validates_gen_tokens():
+    from repro.domains.lm_serving import LMRequest
+
+    with pytest.raises(ValueError, match="gen_tokens"):
+        LMRequest("qwen25_3b", prompt_len=8, gen_tokens=100, max_new_tokens=64)
+    with pytest.raises(ValueError, match="gen_tokens"):
+        LMRequest("qwen25_3b", prompt_len=8, gen_tokens=0)
+
+
+def test_lm_request_launch_key_groups_families():
+    from repro.domains.lm_serving import LMRequest, LMServingDomain
+
+    reqs = [LMRequest("qwen25_3b", 8, 16, batch=2, task_id=0),
+            LMRequest("qwen25_3b", 8, 24, batch=2, task_id=1),
+            LMRequest("qwen25_3b", 16, 16, batch=2, task_id=2)]
+    domain = LMServingDomain(reqs, platforms=[])
+    groups = domain.group_tasks(reqs)
+    assert len(groups) == 2  # same (arch, batch, prompt) -> one compile unit

@@ -1,0 +1,69 @@
+"""Solver quality ordering + certificates on small random instances.
+
+Deliberately hypothesis-free (unlike test_allocation.py) so these run in
+minimal environments too: the §6.3 hierarchy and the MILP dual bound are
+tier-1 invariants of the allocation back-end every domain relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocationProblem,
+    check_allocation,
+    milp_allocation,
+    ml_allocation,
+    proportional_allocation,
+    synthetic,
+)
+
+
+def small_problem(seed=0, mu=4, tau=12, psi=2.0, case="Het-Inc"):
+    return synthetic.generate_case(case, tau=tau, mu=mu, psi=psi, seed=seed)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 42])
+def test_solver_quality_ordering(seed):
+    """On small instances the three approaches are totally ordered:
+    milp <= annealing <= heuristic makespan (§6.3's hierarchy)."""
+    p = small_problem(seed)
+    h = proportional_allocation(p)
+    a = ml_allocation(p, chains=8, steps=1500, rounds=1, seed=0)
+    m = milp_allocation(p, time_limit=30)
+    for alloc in (h, a, m):
+        check_allocation(alloc.A, p)
+    assert a.makespan <= h.makespan * (1 + 1e-6)
+    if m.optimal:  # certified optimum bounds every other solver
+        assert m.makespan <= a.makespan * (1 + 1e-4)
+        assert m.makespan <= h.makespan * (1 + 1e-4)
+
+
+def test_milp_dual_bound_sanity():
+    """The HiGHS dual bound is the paper's external quality certificate
+    (§2.2.4): a true lower bound on every feasible allocation's makespan."""
+    p = small_problem(9)
+    m = milp_allocation(p, time_limit=30)
+    assert m.bound is not None
+    assert 0 <= m.bound <= m.makespan * (1 + 1e-3)
+    for other in (proportional_allocation(p),
+                  ml_allocation(p, chains=8, steps=1000, rounds=1, seed=1)):
+        assert m.bound <= other.makespan * (1 + 1e-3)
+
+
+def test_heuristic_degenerate_zero_latency_platform():
+    """An all-zero (delta, gamma) row means zero standalone latency; the
+    1/L_i share rule must not divide by zero — free platforms take a
+    uniform share and the makespan collapses to 0 (optimal)."""
+    rng = np.random.default_rng(0)
+    delta = rng.uniform(1, 10, size=(4, 6))
+    gamma = rng.uniform(0.1, 1.0, size=(4, 6))
+    delta[1] = 0.0
+    gamma[1] = 0.0
+    delta[3] = 0.0
+    gamma[3] = 0.0
+    p = AllocationProblem(delta=delta, gamma=gamma, c=np.full(6, 0.5))
+    a = proportional_allocation(p)
+    check_allocation(a.A, p)
+    assert np.isfinite(a.A).all()
+    np.testing.assert_allclose(a.A[[0, 2]], 0.0)   # paid platforms idle
+    np.testing.assert_allclose(a.A[[1, 3]], 0.5)   # uniform over free ones
+    assert a.makespan == 0.0
