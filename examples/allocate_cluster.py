@@ -20,6 +20,10 @@ def main():
     ap.add_argument("--full", action="store_true", help="all 128 tasks")
     ap.add_argument("--accuracy", type=float, default=0.05,
                     help="target 95%% CI in $ for every task")
+    ap.add_argument("--mode", choices=("concurrent", "sequential"),
+                    default="concurrent",
+                    help="dispatch: overlap platforms (default) or the "
+                         "legacy serial loop for A/B")
     args = ap.parse_args()
 
     if args.full:
@@ -30,8 +34,8 @@ def main():
     cluster = build_cluster(include_local=False)
     print(f"workload: {len(tasks)} tasks; cluster: {len(cluster)} platforms")
 
-    solver = PricingSolver(tasks, cluster)
-    print("characterising (online benchmarking, paper §3.1.4)...")
+    solver = PricingSolver(tasks, cluster, mode=args.mode)
+    print(f"characterising (online benchmarking, §3.1.4; {args.mode} dispatch)...")
     solver.characterise()  # adaptive online benchmarking
 
     reports = {}

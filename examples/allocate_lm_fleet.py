@@ -19,6 +19,10 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--no-local", action="store_true",
                     help="simulated fleet only (skip the real JAX engine)")
+    ap.add_argument("--mode", choices=("concurrent", "sequential"),
+                    default="concurrent",
+                    help="dispatch: overlap platforms (default) or the "
+                         "legacy serial loop for A/B")
     args = ap.parse_args()
 
     from repro.domains.lm_serving import build_lm_fleet, smoke_requests
@@ -26,9 +30,10 @@ def main():
 
     reqs = smoke_requests(args.requests, arch=args.arch)
     fleet = build_lm_fleet(include_local=not args.no_local)
-    sched = Scheduler(make_domain("lm_serving", reqs, fleet))
+    sched = Scheduler(make_domain("lm_serving", reqs, fleet), mode=args.mode)
 
-    print(f"characterising {len(fleet)} platforms x {len(reqs)} requests ...")
+    print(f"characterising {len(fleet)} platforms x {len(reqs)} requests "
+          f"({args.mode} dispatch) ...")
     sched.characterise(seed=1)
     for (pname, tid), m in sorted(sched.models.items()):
         if tid == reqs[0].task_id:
@@ -42,7 +47,8 @@ def main():
         rep = sched.execute(alloc)
         print(f"{method:9s} predicted={rep.predicted_makespan*1e3:9.2f} ms  "
               f"measured={rep.measured_makespan*1e3:9.2f} ms  "
-              f"err={rep.makespan_error:.1%}")
+              f"err={rep.makespan_error:.1%}  "
+              f"wall={rep.wall_s*1e3:7.1f} ms ({rep.mode})")
     served = rep.summary["tokens"]
     asked = rep.summary["requested_tokens"]
     print("tokens served vs requested:",

@@ -28,6 +28,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import time
 import zlib
 from typing import Sequence
 
@@ -35,7 +37,7 @@ import numpy as np
 
 from repro.core.allocation import linear_work_reduction
 from repro.core.metrics import CombinedModel, LatencyModel, fit_latency_model
-from repro.runtime.domain import Domain, PlatformSpec
+from repro.runtime.domain import Domain, PlatformSpec, seed_for
 
 __all__ = [
     "LMRequest", "ServeRecord", "LMServingModel",
@@ -169,17 +171,24 @@ class LocalLMPlatform(_LMPlatformBase):
         self.spec = PlatformSpec(name, "CPU", "jax-cpu", "localhost",
                                  gflops=float("nan"), rtt_ms=rtt_ms)
         self._engines: dict[tuple, object] = {}
+        # characterisation threads for different launch groups share this
+        # platform; double-checked locking keeps build+warm once per family
+        self._engines_lock = threading.Lock()
 
     def _engine(self, req: LMRequest):
         key = (req.arch, req.smoke, req.batch, req.prompt_len, req.max_seq)
         eng = self._engines.get(key)
         if eng is None:
-            from repro.launch.serve import ServeEngine
+            with self._engines_lock:
+                eng = self._engines.get(key)
+                if eng is None:
+                    from repro.launch.serve import ServeEngine
 
-            eng = ServeEngine(req.config(), batch=req.batch,
-                              prompt_len=req.prompt_len, max_seq=req.max_seq)
-            eng.warm()
-            self._engines[key] = eng
+                    eng = ServeEngine(req.config(), batch=req.batch,
+                                      prompt_len=req.prompt_len,
+                                      max_seq=req.max_seq)
+                    eng.warm()
+                    self._engines[key] = eng
         return eng
 
     def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
@@ -197,10 +206,14 @@ class SimulatedLMPlatform(_LMPlatformBase):
                           + RTT + lognormal jitter
     """
 
-    def __init__(self, spec: PlatformSpec, jitter: float = 0.02, seed: int = 0):
+    def __init__(self, spec: PlatformSpec, jitter: float = 0.02, seed: int = 0,
+                 realtime: float = 0.0):
         self.spec = spec
         self.jitter = jitter
         self._seed = seed
+        #: sleep(latency * realtime) per run: occupy host wall clock so
+        #: overlap benchmarks see true concurrency; records are unchanged.
+        self.realtime = realtime
 
     def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
         n = self._clamp(req, n_tokens)
@@ -213,6 +226,8 @@ class SimulatedLMPlatform(_LMPlatformBase):
         decode = n * ftok / (self.spec.gflops * 1e9)
         jitter = rng.lognormal(0.0, self.jitter)
         latency = (prefill + decode + self.spec.rtt_ms * 1e-3) * jitter
+        if self.realtime:
+            time.sleep(latency * self.realtime)
         return ServeRecord(self.spec.name, req.task_id, n, latency,
                            prefill_latency=prefill * jitter)
 
@@ -275,7 +290,11 @@ class LMServingDomain(Domain):
         ladder = sorted({min(int(n), cap) for n in (token_ladder or self.TOKEN_LADDER)})
         if len(ladder) < 2 and cap > 1:  # need 2 distinct points for eq. 7
             ladder = sorted({max(1, cap // 2), cap})
-        return [platform.run_batch(reqs, n, seed=seed + i)
+        # seeds are a stable hash of (platform, launch group, rung), not the
+        # loop position, so records are independent of dispatch interleaving
+        pname = self.platform_name(platform)
+        key = self.launch_key(reqs[0])
+        return [platform.run_batch(reqs, n, seed=seed_for(seed, pname, key, i))
                 for i, n in enumerate(ladder)]
 
     def fit_models(self, records: Sequence[ServeRecord]) -> LMServingModel:

@@ -51,12 +51,13 @@ class PricingDomain(Domain):
             return benchmark_batch(platform, tasks, path_ladder, seed)
         return benchmark_adaptive_batch(platform, tasks, seed=seed)
 
-    def characterise(self, seed: int = 1, path_ladder=None,
-                     batched: bool = True) -> dict[tuple[str, int], TaskPlatformModel]:
+    def characterise(self, seed: int = 1, path_ladder=None, batched: bool = True,
+                     executor=None) -> dict[tuple[str, int], TaskPlatformModel]:
         if not batched:  # legacy per-task loop, kept for A/B comparisons
             return _platforms.characterise(self.platforms, self.tasks,
                                            path_ladder, seed, batched=False)
-        return super().characterise(seed=seed, path_ladder=path_ladder)
+        return super().characterise(seed=seed, executor=executor,
+                                    path_ladder=path_ladder)
 
     def fit_models(self, records: Sequence[RunRecord]) -> TaskPlatformModel:
         return fit_models(records)

@@ -30,7 +30,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
+import zlib
 from typing import Protocol, Sequence
 
 import numpy as np
@@ -168,22 +170,30 @@ class LocalJaxPlatform:
 
 
 class _TaskMoments:
-    """Per-task true payoff moments, estimated once by the local engine."""
+    """Per-task true payoff moments, estimated once by the local engine.
+
+    The cache is shared by every simulated platform and primed from
+    concurrent per-platform characterisation threads; the lock keeps the
+    calibration batched (first caller prices the whole family, the rest
+    hit the cache) instead of racing to duplicate launches.
+    """
 
     def __init__(self, calib_paths: int = 65536):
         self.calib_paths = calib_paths
         self._cache: dict[int, tuple[float, float]] = {}
+        self._lock = threading.Lock()
 
     def prime(self, tasks: Sequence[PricingTask]) -> None:
         """Calibrate all uncached tasks in family-batched launches."""
-        todo = [t for t in tasks if t.task_id not in self._cache]
-        if not todo:
-            return
-        for t, res in zip(todo, mc.price_batch(todo, self.calib_paths,
-                                               seed=10_007)):
-            # alpha = ci * sqrt(n): the eq. 8 coefficient
-            alpha = float(res.ci95) * math.sqrt(self.calib_paths)
-            self._cache[t.task_id] = (float(res.price), alpha)
+        with self._lock:
+            todo = [t for t in tasks if t.task_id not in self._cache]
+            if not todo:
+                return
+            for t, res in zip(todo, mc.price_batch(todo, self.calib_paths,
+                                                   seed=10_007)):
+                # alpha = ci * sqrt(n): the eq. 8 coefficient
+                alpha = float(res.ci95) * math.sqrt(self.calib_paths)
+                self._cache[t.task_id] = (float(res.price), alpha)
 
     def __call__(self, task: PricingTask) -> tuple[float, float]:
         if task.task_id not in self._cache:
@@ -195,14 +205,22 @@ _SHARED_MOMENTS = _TaskMoments()
 
 
 class SimulatedPlatform:
-    """Replays a Table 2 row; see module docstring for the model."""
+    """Replays a Table 2 row; see module docstring for the model.
+
+    ``realtime`` makes the platform *occupy* host wall clock for a scaled
+    fraction of each replayed latency (``sleep(latency * realtime)``), so
+    overlap benchmarks can observe true concurrent makespans without real
+    remote hardware; the returned records are identical either way.
+    """
 
     def __init__(self, spec: PlatformSpec, jitter: float = 0.02,
-                 moments: _TaskMoments | None = None, seed: int = 0):
+                 moments: _TaskMoments | None = None, seed: int = 0,
+                 realtime: float = 0.0):
         self.spec = spec
         self.jitter = jitter
         self.moments = moments or _SHARED_MOMENTS
         self._seed = seed
+        self.realtime = realtime
 
     def run_batch(self, tasks: Sequence[PricingTask], n_paths,
                   seed: int = 0) -> list[RunRecord]:
@@ -214,9 +232,11 @@ class SimulatedPlatform:
 
     def run(self, task: PricingTask, n_paths: int, seed: int = 0) -> RunRecord:
         price_true, alpha = self.moments(task)
-        rng = np.random.default_rng(
-            (hash((self.spec.name, task.task_id, n_paths, seed)) & 0x7FFFFFFF) + self._seed
-        )
+        # stable across processes (unlike hash(): PYTHONHASHSEED randomises
+        # str hashing), so seeded runs reproduce exactly
+        key = zlib.crc32(
+            f"{self.spec.name}/{task.task_id}/{n_paths}/{seed}".encode())
+        rng = np.random.default_rng(key + self._seed)
         flops = kflop_per_path(task) * 1e3 * n_paths
         compute = flops / (self.spec.gflops * 1e9)
         latency = (compute + self.spec.rtt_ms * 1e-3) * rng.lognormal(0.0, self.jitter)
@@ -225,6 +245,8 @@ class SimulatedPlatform:
         # measured CI wobbles with the sample variance estimate (chi^2_k/k)
         k = max(n_paths - 1, 1)
         ci = alpha / math.sqrt(n_paths) * math.sqrt(rng.chisquare(min(k, 10**6)) / min(k, 10**6))
+        if self.realtime:
+            time.sleep(latency * self.realtime)
         return RunRecord(self.spec.name, task.task_id, n_paths, price, ci, latency)
 
 

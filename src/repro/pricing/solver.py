@@ -19,6 +19,7 @@ quantities), unpacked from the scheduler's generic report.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import numpy as np
@@ -45,18 +46,21 @@ class ExecutionReport:
 
     @property
     def makespan_error(self) -> float:
+        if self.measured_makespan == 0:
+            return math.inf  # nothing dispatched: model unassessable
         return abs(self.predicted_makespan - self.measured_makespan) / self.measured_makespan
 
 
 class PricingSolver:
-    def __init__(self, tasks: Sequence[PricingTask], platforms: Sequence[Platform]):
+    def __init__(self, tasks: Sequence[PricingTask], platforms: Sequence[Platform],
+                 mode: str = "concurrent"):
         # Imported here: repro.pricing.__init__ imports this module before
         # the package is fully initialised, and the domain adapter imports
         # back into repro.pricing.
         from repro.domains.pricing import PricingDomain
 
         self.domain = PricingDomain(tasks, platforms)
-        self.scheduler = Scheduler(self.domain)
+        self.scheduler = Scheduler(self.domain, mode=mode)
 
     @property
     def tasks(self) -> list[PricingTask]:

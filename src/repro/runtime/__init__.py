@@ -9,7 +9,8 @@ generic :class:`Scheduler` that drives the loop over the shared
     sched = Scheduler(make_domain("lm_serving", requests, fleet))
     report = sched.run(method="milp")
 """
-from .domain import Domain, PlatformSpec, RunRecordLike  # noqa: F401
+from .domain import Domain, PlatformSpec, RunRecordLike, seed_for  # noqa: F401
+from .executor import Executor, TimedResult  # noqa: F401
 from .registry import (  # noqa: F401
     available_domains,
     domain_factory,

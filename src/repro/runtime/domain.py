@@ -30,13 +30,31 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import zlib
 from typing import Any, Hashable, Protocol, Sequence
 
 import numpy as np
 
 from repro.core.allocation import mc_work_reduction
+from .executor import Executor
 
-__all__ = ["Domain", "PlatformSpec", "RunRecordLike"]
+__all__ = ["Domain", "PlatformSpec", "RunRecordLike", "seed_for"]
+
+
+def seed_for(base_seed: int, platform_name: str, launch_key: Hashable,
+             rung: int) -> int:
+    """Deterministic benchmark seed for one (platform, launch group, rung).
+
+    A stable hash (CRC32 — unlike ``hash()``, not randomised per process
+    by PYTHONHASHSEED) of the identifying coordinates, so every record of
+    a characterisation run is a pure function of *what* is being measured,
+    never of dispatch order. This is what makes concurrent and sequential
+    ladder climbs bitwise-identical regardless of thread interleaving —
+    and replaces positional ``seed + i`` derivations, under which records
+    depended on where in the loop a rung happened to sit.
+    """
+    key = f"{base_seed}|{platform_name}|{launch_key!r}|{rung}"
+    return zlib.crc32(key.encode()) & 0x7FFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,20 +139,34 @@ class Domain(abc.ABC):
     def fit_models(self, records: Sequence[RunRecordLike]):
         """Fit this domain's metric models from one task's rung records."""
 
-    def characterise(self, seed: int = 1, **kw) -> dict[tuple[str, int], Any]:
+    def characterise(self, seed: int = 1, executor: Executor | None = None,
+                     **kw) -> dict[tuple[str, int], Any]:
         """Benchmark every (platform, task) pair and fit its models.
 
-        The generic loop: group tasks by launch key, climb each group's
-        benchmark ladder once per platform, fit per-task models from the
-        aligned rungs."""
-        out: dict[tuple[str, int], Any] = {}
+        The generic pipeline: group tasks by launch key, then climb the
+        ladders as one job *per platform* — concurrently when the executor
+        says so, since ladders on distinct platforms share no state. A
+        platform's launch groups climb serially inside their job (they
+        contend for the same device; overlapping them would corrupt the
+        wall-clock latencies the models are fitted from — the same
+        granularity execute uses). Seeds must derive from each rung's
+        coordinates (see :func:`seed_for`), never from loop position, so
+        both modes produce identical records."""
         groups = self.group_tasks(self.tasks)
-        for p in self.platforms:
+
+        def climb(p) -> dict[tuple[str, int], Any]:
+            fitted: dict[tuple[str, int], Any] = {}
             for _key, gtasks in groups:
                 rungs = self.characterise_batch(p, gtasks, seed=seed, **kw)
                 for k, t in enumerate(gtasks):
-                    out[(self.platform_name(p), t.task_id)] = self.fit_models(
+                    fitted[(self.platform_name(p), t.task_id)] = self.fit_models(
                         [rung[k] for rung in rungs])
+            return fitted
+
+        out: dict[tuple[str, int], Any] = {}
+        for fitted in (executor or Executor(mode="sequential")).map(
+                climb, self.platforms):
+            out.update(fitted)  # job order == legacy platform-major order
         return out
 
     def model_coefficients(self, model) -> tuple[float, float]:

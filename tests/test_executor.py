@@ -1,0 +1,233 @@
+"""Concurrency semantics of the runtime Executor and concurrent Scheduler:
+mode parity (identical records/summary), true wall-clock overlap, seed
+derivation stability, and the zero-makespan guard."""
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import AllocationProblem
+from repro.runtime import (
+    Executor,
+    RuntimeReport,
+    Scheduler,
+    make_domain,
+    seed_for,
+)
+from repro.runtime.domain import Domain
+
+
+# ------------------------------------------------------------- the executor
+
+def test_executor_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown executor mode"):
+        Executor(mode="parallel-ish")
+    with pytest.raises(ValueError, match="unknown executor mode"):
+        Scheduler(types.SimpleNamespace(), mode="parallel-ish")
+
+
+def test_executor_preserves_order_both_modes():
+    for mode in ("sequential", "concurrent"):
+        out = Executor(mode=mode).map(lambda x: x * x, range(10))
+        assert out == [x * x for x in range(10)]
+
+
+def test_executor_propagates_exceptions():
+    def boom(x):
+        raise RuntimeError(f"job {x} failed")
+
+    for mode in ("sequential", "concurrent"):
+        with pytest.raises(RuntimeError, match="job"):
+            Executor(mode=mode).map(boom, [1, 2])
+
+
+def test_executor_concurrent_overlaps_sleeps():
+    """Four 0.15s sleeps must overlap: concurrent wall well under the sum."""
+    def job(_):
+        time.sleep(0.15)
+        return True
+
+    t0 = time.perf_counter()
+    timed = Executor(mode="concurrent").map_timed(job, range(4))
+    wall = time.perf_counter() - t0
+    assert all(r.value for r in timed)
+    assert all(r.wall_s >= 0.15 for r in timed)  # each job's own clock
+    assert wall < 0.45  # vs 0.6s back-to-back
+
+
+# --------------------------------------------------------- seed derivation
+
+def test_seed_for_is_stable_and_order_free():
+    s = seed_for(1, "Desktop", ("qwen25_3b", True, 2, 8, 104), 0)
+    assert s == seed_for(1, "Desktop", ("qwen25_3b", True, 2, 8, 104), 0)
+    assert 0 <= s < 2**31
+    # every coordinate matters
+    base = (1, "Desktop", "key", 0)
+    variants = [(2, "Desktop", "key", 0), (1, "GPU", "key", 0),
+                (1, "Desktop", "other", 0), (1, "Desktop", "key", 1)]
+    assert len({seed_for(*base), *[seed_for(*v) for v in variants]}) == 5
+
+
+# ------------------------------------------------------ zero-makespan guard
+
+def test_makespan_error_guard_on_empty_dispatch():
+    rep = RuntimeReport(allocation=None, predicted_makespan=1.0,
+                        measured_makespan=0.0, platform_latencies={},
+                        records=[])
+    assert rep.makespan_error == np.inf
+
+
+def test_pricing_execution_report_guard_on_empty_dispatch():
+    from repro.pricing.solver import ExecutionReport
+
+    rep = ExecutionReport(allocation=None, predicted_makespan=1.0,
+                          measured_makespan=0.0, platform_latencies={},
+                          prices={}, predicted_ci={}, measured_ci={},
+                          records=[])
+    assert rep.makespan_error == np.inf
+
+
+# ------------------------------------------- mode parity: pricing domain
+
+def _pricing_scheduler(mode):
+    from repro.pricing import SimulatedPlatform, TABLE2_SPECS, table1_workload
+    from repro.pricing.platforms import _TaskMoments
+
+    tasks = table1_workload(seed=12, n_steps=8,
+                            categories=[("BS-A", 2), ("H-A", 2)])
+    moments = _TaskMoments(calib_paths=4096)
+    platforms = [SimulatedPlatform(TABLE2_SPECS[0], moments=moments),
+                 SimulatedPlatform(TABLE2_SPECS[9], moments=moments),
+                 SimulatedPlatform(TABLE2_SPECS[14], moments=moments)]
+    sched = Scheduler(make_domain("pricing", tasks, platforms), mode=mode)
+    sched.characterise(seed=1, path_ladder=(512, 2048))
+    return sched
+
+
+def test_pricing_concurrent_matches_sequential():
+    """Characterise + execute must be bitwise-identical across modes."""
+    seq = _pricing_scheduler("sequential")
+    conc = _pricing_scheduler("concurrent")
+    assert set(seq.models) == set(conc.models)
+    for key in seq.models:
+        assert seq.models[key].latency.beta == conc.models[key].latency.beta
+        assert seq.models[key].accuracy.alpha == conc.models[key].accuracy.alpha
+
+    alloc = seq.allocate(0.5, method="milp", time_limit=20)
+    r_seq = seq.execute(alloc, 0.5, seed=3)
+    r_conc = conc.execute(alloc, 0.5, seed=3)
+    assert r_seq.mode == "sequential" and r_conc.mode == "concurrent"
+    assert r_seq.records == r_conc.records
+    assert r_seq.summary == r_conc.summary
+    assert r_seq.measured_makespan == r_conc.measured_makespan
+
+
+def test_pricing_concurrent_makespan_is_max_not_sum():
+    """Measured makespan is the slowest platform, bounded by the latency sum."""
+    sched = _pricing_scheduler("concurrent")
+    rep = sched.execute(sched.allocate(0.5, method="heuristic"), 0.5)
+    loaded = [v for v in rep.platform_latencies.values() if v > 0]
+    assert len(loaded) >= 2  # the heuristic spreads a 3-platform instance
+    assert rep.measured_makespan == pytest.approx(max(loaded))
+    assert rep.measured_makespan <= sum(loaded) + 1e-12
+    assert set(rep.platform_wall_s) == set(rep.platform_latencies)
+
+
+# ------------------------------------------- mode parity: LM serving domain
+
+def test_lm_concurrent_matches_sequential():
+    from repro.domains.lm_serving import build_lm_fleet, smoke_requests
+
+    reqs = smoke_requests(3)
+    scheds = {}
+    for mode in ("sequential", "concurrent"):
+        sched = Scheduler(
+            make_domain("lm_serving", reqs, build_lm_fleet(include_local=False)),
+            mode=mode)
+        sched.characterise(seed=1, token_ladder=(2, 4, 8))
+        scheds[mode] = sched
+    seq, conc = scheds["sequential"], scheds["concurrent"]
+    for key in seq.models:
+        assert seq.models[key].latency.beta == conc.models[key].latency.beta
+        assert seq.models[key].latency.gamma == conc.models[key].latency.gamma
+
+    alloc = seq.allocate(method="heuristic")
+    r_seq = seq.execute(alloc, seed=3)
+    r_conc = conc.execute(alloc, seed=3)
+    assert r_seq.records == r_conc.records
+    assert r_seq.summary == r_conc.summary
+
+
+# ----------------------------------------------- true wall-clock overlap
+
+class _SleepDomain(Domain):
+    """Minimal domain whose dispatch occupies real wall clock: the overlap
+    test measures *concurrency*, not simulation bookkeeping."""
+
+    name = "_sleep"
+
+    def __init__(self, n_tasks, platforms, sleep_s=0.2):
+        super().__init__([types.SimpleNamespace(task_id=i) for i in range(n_tasks)],
+                         platforms)
+        self.sleep_s = sleep_s
+
+    def launch_key(self, task):
+        return 0  # one launch group per platform
+
+    def characterise_batch(self, platform, tasks, seed=1, **kw):
+        return [[types.SimpleNamespace(platform=platform.spec.name,
+                                       task_id=t.task_id, latency=0.01)
+                 for t in tasks] for _ in range(2)]
+
+    def fit_models(self, records):
+        return types.SimpleNamespace(
+            combined=types.SimpleNamespace(delta=1.0, gamma=0.0))
+
+    def work_units(self, model, quality):
+        return quality
+
+    def dispatch_batch(self, platform, tasks, units, seed=0):
+        time.sleep(self.sleep_s)  # one device busy-window per launch group
+        return [types.SimpleNamespace(platform=platform.spec.name,
+                                      task_id=t.task_id, latency=self.sleep_s)
+                for t in tasks]
+
+
+def _spec_platform(name):
+    return types.SimpleNamespace(spec=types.SimpleNamespace(name=name))
+
+
+def test_concurrent_execute_overlaps_wall_clock():
+    platforms = [_spec_platform("p0"), _spec_platform("p1"),
+                 _spec_platform("p2")]
+    domain = _SleepDomain(2, platforms, sleep_s=0.2)
+    sched = Scheduler(domain)
+    sched.characterise()
+    alloc = sched.allocate(quality=8.0, method="heuristic")
+    r_seq = sched.execute(alloc, 8.0, mode="sequential")
+    r_conc = sched.execute(alloc, 8.0, mode="concurrent")
+    assert r_seq.wall_s >= 3 * 0.2 * 0.95        # sum of platform sleeps
+    assert r_conc.wall_s < r_seq.wall_s * 0.75   # genuine overlap
+    assert [r.task_id for r in r_conc.records] == [r.task_id for r in r_seq.records]
+    # per-platform wall clocks span only that platform's dispatches
+    for wall in r_conc.platform_wall_s.values():
+        assert wall == pytest.approx(0.2, rel=0.5)
+
+
+def test_realtime_simulated_platform_occupies_wall_clock():
+    """realtime=x makes a simulated run sleep x * latency, records unchanged."""
+    from repro.domains.lm_serving import (
+        LM_FLEET_SPECS, SimulatedLMPlatform, smoke_requests,
+    )
+
+    (req,) = smoke_requests(1)
+    spec = LM_FLEET_SPECS[3]  # Cloud Pod: 120ms RTT dominates
+    fast = SimulatedLMPlatform(spec)
+    slow = SimulatedLMPlatform(spec, realtime=1.0)
+    rec_fast = fast.run(req, 8, seed=0)
+    t0 = time.perf_counter()
+    rec_slow = slow.run(req, 8, seed=0)
+    wall = time.perf_counter() - t0
+    assert rec_slow == rec_fast  # realtime never changes the record
+    assert wall >= rec_slow.latency * 0.9
