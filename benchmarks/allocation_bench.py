@@ -12,6 +12,15 @@ replayed latency occupies host wall clock scaled by ``TIME_SCALE`` — so
 the measured speedup is true wall-clock overlap, not bookkeeping: the
 sequential wall tracks the sum of per-platform latencies, the concurrent
 wall tracks their max (the paper's makespan semantics, §3).
+
+The ``online`` section (PR 4 onward) A/Bs static vs adaptive execution
+under the canonical drift scenario — the busiest platform slows
+``SLOWDOWN_FACTOR``x at the static plan's half-makespan. The static leg
+rides the drift out; the adaptive leg (:class:`repro.runtime.
+OnlineScheduler`) detects it, re-fits the metric models from execute-time
+records and re-solves the remaining work. Tracked: the adaptation speedup
+(regression bar: >= 1.5x), re-solve counts and wall time, and that the
+unperturbed online run still solves exactly once.
 """
 from __future__ import annotations
 
@@ -29,14 +38,23 @@ ACCURACY = 0.05
 #: wall-clock fraction of each replayed latency the realtime platforms
 #: occupy during the overlap A/B (keeps the section under ~5s).
 TIME_SCALE = 0.05
+#: canonical drift: the busiest platform slows this much at the static
+#: plan's half-makespan.
+SLOWDOWN_FACTOR = 4.0
+ONLINE_ROUNDS = 8
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_allocation.json")
 
 
 def main(fast: bool = True) -> None:
+    import numpy as np
+
+    from repro.core import platform_latencies
     from repro.pricing import SimulatedPlatform, TABLE2_SPECS, table1_workload
     from repro.pricing.platforms import _TaskMoments
-    from repro.runtime import Scheduler, make_domain
+    from repro.runtime import (
+        OnlineConfig, OnlineScheduler, Scenario, Scheduler, make_domain,
+    )
 
     tasks = table1_workload(seed=2015, n_steps=64)[:N_TASKS]
     moments = _TaskMoments(calib_paths=16384)
@@ -100,6 +118,62 @@ def main(fast: bool = True) -> None:
          f"characterise_speedup={overlap['characterise_speedup']:.2f}x;"
          f"identical={overlap['records_identical']}")
 
+    # -- online: static vs adaptive under the canonical drift scenario ----
+    def fresh_scheduler(scenario=None):
+        ps = [SimulatedPlatform(TABLE2_SPECS[i], moments=moments, seed=7)
+              for i in PLATFORM_ROWS]
+        s = Scheduler(make_domain("pricing", tasks, ps))
+        s.characterise(seed=1, path_ladder=(1_024, 4_096, 16_384, 65_536))
+        if scenario is not None:
+            for p in ps:
+                p.attach_scenario(scenario)
+        return s, ps
+
+    base, base_ps = fresh_scheduler()
+    base_alloc = base.allocate(ACCURACY, method="milp", time_limit=30)
+    lat = platform_latencies(base_alloc.A, base.problem(ACCURACY))
+    slow_name = base_ps[int(np.argmax(lat))].spec.name
+    t_half = base_alloc.makespan / 2
+    scenario = Scenario().slowdown(slow_name, t_half, SLOWDOWN_FACTOR)
+    cfg = OnlineConfig(rounds=ONLINE_ROUNDS)
+
+    # unperturbed control: the feedback loop must not re-solve on noise
+    ctl_sched, _ = fresh_scheduler()
+    control = OnlineScheduler(ctl_sched, cfg).run(
+        ACCURACY, method="milp", seed=3, time_limit=30)
+
+    static_sched, _ = fresh_scheduler(scenario)
+    static_rep = static_sched.execute(
+        static_sched.allocate(ACCURACY, method="milp", time_limit=30),
+        ACCURACY, seed=3)
+
+    online_sched, _ = fresh_scheduler(scenario)
+    with timer() as t_online:
+        adaptive = OnlineScheduler(online_sched, cfg).run(
+            ACCURACY, method="milp", seed=3, time_limit=30)
+    online = {
+        "scenario": {"platform": slow_name, "t": t_half,
+                     "factor": SLOWDOWN_FACTOR},
+        "rounds": ONLINE_ROUNDS,
+        "static_makespan": static_rep.measured_makespan,
+        "adaptive_makespan": adaptive.measured_makespan,
+        "adaptation_speedup": (static_rep.measured_makespan
+                               / adaptive.measured_makespan),
+        "n_resolves": adaptive.n_resolves,
+        "n_skipped": adaptive.n_skipped,
+        "n_refits": adaptive.n_refits,
+        "resolve_wall_s": adaptive.resolve_wall_s,
+        "solve_wall_s": adaptive.solve_wall_s,
+        "adaptive_wall_s": t_online.seconds,
+        "control_makespan": control.measured_makespan,
+        "solves_unperturbed": control.n_solves,
+        "resolves_unperturbed": control.n_resolves,
+    }
+    emit("allocation.online", adaptive.resolve_wall_s * 1e6,
+         f"speedup={online['adaptation_speedup']:.2f}x;"
+         f"resolves={adaptive.n_resolves};"
+         f"unperturbed_resolves={control.n_resolves}")
+
     payload = {
         "benchmark": "allocation_16x4",
         "instance": {"tasks": N_TASKS, "platforms": len(platforms),
@@ -109,6 +183,7 @@ def main(fast: bool = True) -> None:
         "characterise_s": t_char.seconds,
         "solvers": solvers,
         "overlap": overlap,
+        "online": online,
     }
     with open(OUT_PATH, "w") as fh:
         json.dump(payload, fh, indent=2)

@@ -15,10 +15,13 @@ from .allocation import (  # noqa: F401
     Allocation,
     AllocationProblem,
     check_allocation,
+    expand_allocation,
     linear_work_reduction,
     makespan,
     mc_work_reduction,
     platform_latencies,
+    restrict_allocation,
+    restrict_problem,
 )
 from .annealing import anneal, lp_polish, ml_allocation  # noqa: F401
 from .heuristic import proportional_allocation  # noqa: F401

@@ -21,7 +21,7 @@ and :mod:`repro.core.milp`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -33,6 +33,9 @@ __all__ = [
     "check_allocation",
     "mc_work_reduction",
     "linear_work_reduction",
+    "restrict_problem",
+    "restrict_allocation",
+    "expand_allocation",
     "SUPPORT_ATOL",
 ]
 
@@ -70,12 +73,19 @@ class AllocationProblem:
     c     : (tau,)     required qualities (accuracies, token counts, ...)
     reduction : (delta, c) -> W, the domain's quality->work map.
                 Defaults to the Monte Carlo inverse-square law W = delta/c^2.
+    offsets : (mu,)    per-platform latency already committed before this
+                solve — zero for the one-shot flow; mid-workload re-solves
+                (online re-allocation) set each platform's elapsed busy
+                time here so the makespan being minimised is the *finish*
+                time, completed shares included, not just the remaining
+                load. All three solvers honour it.
     """
 
     delta: np.ndarray
     gamma: np.ndarray
     c: np.ndarray
     reduction: Callable[[np.ndarray, np.ndarray], np.ndarray] = mc_work_reduction
+    offsets: np.ndarray | None = None
 
     def __post_init__(self):
         delta = np.asarray(self.delta, dtype=np.float64)
@@ -87,9 +97,16 @@ class AllocationProblem:
             raise ValueError(f"c must be (tau,): {c.shape} vs tau={delta.shape[1]}")
         if (delta < 0).any() or (gamma < 0).any() or (c <= 0).any():
             raise ValueError("delta, gamma must be >= 0 and c > 0")
+        offsets = (np.zeros(delta.shape[0]) if self.offsets is None
+                   else np.asarray(self.offsets, dtype=np.float64))
+        if offsets.shape != (delta.shape[0],):
+            raise ValueError(f"offsets must be (mu,): {offsets.shape} vs mu={delta.shape[0]}")
+        if (offsets < 0).any():
+            raise ValueError("offsets must be >= 0")
         object.__setattr__(self, "delta", delta)
         object.__setattr__(self, "gamma", gamma)
         object.__setattr__(self, "c", c)
+        object.__setattr__(self, "offsets", offsets)
 
     @property
     def mu(self) -> int:
@@ -131,15 +148,96 @@ class Allocation:
 
 
 def platform_latencies(A: np.ndarray, problem: AllocationProblem) -> np.ndarray:
-    """H_L(A, c): per-platform latency vector (eq. 10's inner reduction)."""
+    """H_L(A, c): per-platform latency vector (eq. 10's inner reduction),
+    plus any already-committed per-platform offsets."""
     A = np.asarray(A, dtype=np.float64)
     support = A > SUPPORT_ATOL
-    return (problem.work * A).sum(axis=1) + (problem.gamma * support).sum(axis=1)
+    return ((problem.work * A).sum(axis=1)
+            + (problem.gamma * support).sum(axis=1) + problem.offsets)
 
 
 def makespan(A: np.ndarray, problem: AllocationProblem) -> float:
     """G_L(A, c) = max_i H_L(A, c)[i] (eq. 10's outer reduction)."""
     return float(platform_latencies(A, problem).max())
+
+
+# -- sub-problems over remaining work (online re-allocation) -----------------
+#
+# Mid-workload, part of every task is already executed and some platforms may
+# be gone (outage). The re-solve therefore runs on a *restricted* problem:
+# surviving platform rows, still-active task columns, and each kept task's
+# work scaled by its remaining fraction. Completed shares stay fixed — they
+# are simply absent from the sub-problem — and the solution is expanded back
+# into the full (mu, tau) frame for dispatch accounting.
+
+def restrict_problem(
+    problem: AllocationProblem,
+    platforms: Sequence[int] | None = None,
+    tasks: Sequence[int] | None = None,
+    remaining: Sequence[float] | None = None,
+    offsets: Sequence[float] | None = None,
+) -> AllocationProblem:
+    """Sub-problem over platform rows / task columns with remaining work.
+
+    ``remaining`` (aligned with the kept ``tasks``) scales each kept task's
+    delta column by its outstanding work fraction; both shipped reductions
+    (inverse-square and linear) are linear in delta, so this scales the work
+    matrix W by exactly that fraction while gamma — charged per dispatch,
+    however little work remains — is kept whole. ``offsets`` (full-frame,
+    one per original platform) carries each platform's already-elapsed
+    busy time into the sub-problem, so the re-solve minimises finish time
+    rather than piling remaining work onto a platform that is merely idle
+    *in the sub-problem's frame*.
+    """
+    rows = np.arange(problem.mu) if platforms is None else np.asarray(platforms, dtype=int)
+    cols = np.arange(problem.tau) if tasks is None else np.asarray(tasks, dtype=int)
+    if rows.size == 0 or cols.size == 0:
+        raise ValueError("restricted problem needs >= 1 platform and >= 1 task")
+    delta = problem.delta[np.ix_(rows, cols)]
+    if remaining is not None:
+        r = np.asarray(remaining, dtype=np.float64)
+        if r.shape != (cols.size,):
+            raise ValueError(f"remaining must align with kept tasks: {r.shape} vs {cols.size}")
+        if (r <= 0).any() or (r > 1 + 1e-9).any():
+            raise ValueError("remaining fractions must be in (0, 1]")
+        delta = delta * r[None, :]
+    off = problem.offsets if offsets is None else np.asarray(offsets, dtype=np.float64)
+    return AllocationProblem(delta=delta, gamma=problem.gamma[np.ix_(rows, cols)],
+                             c=problem.c[cols], reduction=problem.reduction,
+                             offsets=off[rows])
+
+
+def restrict_allocation(A: np.ndarray, platforms: Sequence[int],
+                        tasks: Sequence[int]) -> np.ndarray:
+    """Project an allocation into a sub-problem frame (warm-start incumbent).
+
+    Columns that lose all their mass (every supporting platform dropped)
+    fall back to a uniform share over the kept platforms; all columns are
+    renormalised to sum to 1.
+    """
+    rows = np.asarray(platforms, dtype=int)
+    cols = np.asarray(tasks, dtype=int)
+    sub = np.asarray(A, dtype=np.float64)[np.ix_(rows, cols)].copy()
+    colsum = sub.sum(axis=0)
+    orphan = colsum <= SUPPORT_ATOL
+    if orphan.any():
+        sub[:, orphan] = 1.0 / rows.size
+        colsum = sub.sum(axis=0)
+    return sub / colsum
+
+
+def expand_allocation(A_sub: np.ndarray, mu: int, tau: int,
+                      platforms: Sequence[int], tasks: Sequence[int]) -> np.ndarray:
+    """Embed a sub-problem allocation back into the full (mu, tau) frame.
+
+    Dropped rows/columns are zero — completed tasks need no allocation and
+    dead platforms must receive none — so the result is *not* a valid full
+    allocation (done columns do not sum to 1); it is the dispatch plan for
+    the remaining work only.
+    """
+    full = np.zeros((mu, tau))
+    full[np.ix_(np.asarray(platforms, dtype=int), np.asarray(tasks, dtype=int))] = A_sub
+    return full
 
 
 def check_allocation(A: np.ndarray, problem: AllocationProblem, atol: float = 1e-6) -> None:

@@ -22,6 +22,7 @@ the support, so the polish is iterated to a fixed point.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -32,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from .allocation import SUPPORT_ATOL, Allocation, AllocationProblem, makespan
-from .heuristic import proportional_allocation
+from .heuristic import incumbent_shortcut, proportional_allocation
 
 __all__ = ["ml_allocation", "lp_polish", "anneal"]
 
@@ -41,16 +42,16 @@ __all__ = ["ml_allocation", "lp_polish", "anneal"]
 # JAX annealing kernel
 # --------------------------------------------------------------------------
 
-def _makespan_jnp(A, W, G, atol=SUPPORT_ATOL):
+def _makespan_jnp(A, W, G, off, atol=SUPPORT_ATOL):
     support = A > atol
-    H = (W * A).sum(axis=1) + jnp.where(support, G, 0.0).sum(axis=1)
+    H = (W * A).sum(axis=1) + jnp.where(support, G, 0.0).sum(axis=1) + off
     return H.max()
 
 
-def _anneal_chain(A0, W, G, key, steps: int, T0: float, Tf: float):
+def _anneal_chain(A0, W, G, off, key, steps: int, T0: float, Tf: float):
     """One SA chain; vmapped over (A0, key) by :func:`anneal`."""
     mu, tau = W.shape
-    m0 = _makespan_jnp(A0, W, G)
+    m0 = _makespan_jnp(A0, W, G, off)
 
     def body(k, state):
         A, m_cur, best_A, best_m, key = state
@@ -64,7 +65,7 @@ def _anneal_chain(A0, W, G, key, steps: int, T0: float, Tf: float):
         frac = jnp.where(move_all, 1.0, jax.random.uniform(k5))
         amount = A[src, j] * frac
         A_new = A.at[src, j].add(-amount).at[dst, j].add(amount)
-        m_new = _makespan_jnp(A_new, W, G)
+        m_new = _makespan_jnp(A_new, W, G, off)
         # geometric temperature schedule
         T = T0 * (Tf / T0) ** (k / steps)
         accept = (m_new < m_cur) | (
@@ -83,8 +84,8 @@ def _anneal_chain(A0, W, G, key, steps: int, T0: float, Tf: float):
 
 
 _anneal_batch = jax.jit(
-    jax.vmap(_anneal_chain, in_axes=(0, None, None, 0, None, None, None)),
-    static_argnums=(4,),
+    jax.vmap(_anneal_chain, in_axes=(0, None, None, None, 0, None, None, None)),
+    static_argnums=(5,),
 )
 
 
@@ -103,12 +104,18 @@ def anneal(
     """
     W = jnp.asarray(problem.work, dtype=jnp.float32)
     G = jnp.asarray(problem.gamma, dtype=jnp.float32)
+    off = jnp.asarray(problem.offsets, dtype=jnp.float32)
     A0 = jnp.asarray(A_starts, dtype=jnp.float32)
     chains = A0.shape[0]
-    m_start = makespan(A_starts[0], problem)
+    # temperature scale from the offset-STRIPPED makespan: on a late online
+    # re-solve the committed offsets dominate the objective's absolute value
+    # while moves only shift the remaining-work part, and an offsets-scaled
+    # T0 would accept everything (random walk) through most of the schedule
+    m_start = makespan(A_starts[0],
+                       dataclasses.replace(problem, offsets=None))
     keys = jax.random.split(jax.random.PRNGKey(seed), chains)
     best_A, best_m = _anneal_batch(
-        A0, W, G, keys, steps, m_start * T0_frac, m_start * Tf_frac
+        A0, W, G, off, keys, steps, m_start * T0_frac, m_start * Tf_frac
     )
     return np.asarray(best_A, dtype=np.float64), np.asarray(best_m, dtype=np.float64)
 
@@ -150,7 +157,7 @@ def lp_polish(problem: AllocationProblem, support: np.ndarray) -> tuple[np.ndarr
           np.concatenate([np.arange(nnz), np.full(mu, nnz)]))),
         shape=(mu, nnz + 1),
     )
-    b_ub = -gamma_const
+    b_ub = -gamma_const - problem.offsets
 
     bounds = [(0, 1)] * nnz + [(0, None)]
     res = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
@@ -195,9 +202,25 @@ def ml_allocation(
     seed: int = 0,
     time_limit: float = 600.0,
     polish_top_k: int = 4,
+    incumbent: Allocation | None = None,
+    warm_tol: float = 0.05,
 ) -> Allocation:
-    """Heuristic start → multi-chain SA → iterated LP polish (paper §4.3.3)."""
+    """Heuristic start → multi-chain SA → iterated LP polish (paper §4.3.3).
+
+    ``incumbent`` (online re-solves) first tries the warm-start early exit
+    (:func:`incumbent_shortcut`); when the solve does proceed, the incumbent
+    seeds one SA chain so the annealer explores from the executing
+    allocation as well as from scratch.
+    """
     t_start = time.perf_counter()
+    warm_meta = {}
+    A_inc = None
+    if incumbent is not None:
+        A_inc, shortcut = incumbent_shortcut(problem, incumbent, "ml",
+                                             warm_tol, t_start)
+        if shortcut is not None:
+            return shortcut
+        warm_meta = {"warm_start": "solved"}
     rng = np.random.default_rng(seed)
     heur = proportional_allocation(problem)
     mu, tau = problem.mu, problem.tau
@@ -211,8 +234,14 @@ def ml_allocation(
         starts.append(A)
     A_starts = np.stack(starts)
     A_starts[0] = heur.A  # keep the heuristic verbatim in chain 0
+    if A_inc is not None and chains > 1:
+        A_starts[1] = A_inc  # warm start: one chain anneals the incumbent
 
     best_A, best_m = heur.A, heur.makespan
+    if A_inc is not None:
+        m_inc = makespan(A_inc, problem)
+        if m_inc < best_m:
+            best_A, best_m = A_inc, m_inc
     round_idx = 0
     while round_idx < rounds and (time.perf_counter() - t_start) < time_limit:
         cand_A, cand_m = anneal(problem, A_starts, steps=steps, seed=seed + round_idx)
@@ -233,5 +262,5 @@ def ml_allocation(
         solver="ml",
         solve_time=time.perf_counter() - t_start,
         meta={"chains": chains, "steps": steps, "rounds": round_idx,
-              "heuristic_makespan": heur.makespan},
+              "heuristic_makespan": heur.makespan, **warm_meta},
     )

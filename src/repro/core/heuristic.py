@@ -13,13 +13,75 @@ exactly the regime where the ML/MILP solvers win (paper §6.3).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
 from .allocation import Allocation, AllocationProblem, makespan, platform_latencies
 
-__all__ = ["proportional_allocation"]
+__all__ = ["proportional_allocation", "incumbent_shortcut"]
+
+
+def incumbent_shortcut(
+    problem: AllocationProblem,
+    incumbent,
+    solver: str,
+    warm_tol: float,
+    t0: float,
+) -> tuple[np.ndarray, Allocation | None]:
+    """Warm-start early exit shared by the optimising solvers.
+
+    Online re-solves usually start from an incumbent allocation (the one
+    currently executing). If the incumbent's predicted makespan on the
+    re-fitted problem is already within ``warm_tol`` of the fresh
+    proportional-heuristic bound, a full solve cannot buy enough to matter —
+    e.g. a *uniform* drift that slows every platform equally leaves the
+    incumbent optimal — so the solve is skipped and the incumbent returned
+    with ``meta["warm_start"] == "skipped"``. Otherwise the caller proceeds
+    (``meta["warm_start"] == "solved"``) with the incumbent matrix available
+    as a start point.
+
+    With per-platform offsets (mid-run re-solves) the incumbent must clear
+    the bar in *both* frames to be waved through:
+
+    * on the offset-stripped problem — is its share of the remaining work
+      well balanced on its own terms? Late in a run the committed time
+      dominates finish times, and an offset-carrying ratio test alone
+      would wave anything through;
+    * on the offset-carrying problem (tolerance scaled by the remaining
+      work, not the finish time) — does it respect who is already busy? A
+      remaining-schedule that is flat-optimal can still pile work onto the
+      platform with the largest committed backlog.
+
+    With zero offsets both collapse to the plain
+    ``m_inc <= heuristic * (1 + warm_tol)``.
+
+    Returns ``(A_incumbent, shortcut)`` where ``shortcut`` is the ready
+    Allocation when the solve should be skipped, else None.
+    """
+    A_inc = np.asarray(incumbent.A if hasattr(incumbent, "A") else incumbent,
+                       dtype=np.float64)
+    if A_inc.shape != (problem.mu, problem.tau):
+        raise ValueError(
+            f"incumbent shape {A_inc.shape} does not match problem "
+            f"({problem.mu}, {problem.tau}); restrict it first")
+    flat = (dataclasses.replace(problem, offsets=None)
+            if problem.offsets.any() else problem)
+    heur_flat = proportional_allocation(flat)
+    skip = makespan(A_inc, flat) <= heur_flat.makespan * (1.0 + warm_tol)
+    if skip and problem.offsets.any():
+        heur_off = proportional_allocation(problem)
+        skip = (makespan(A_inc, problem)
+                <= heur_off.makespan + warm_tol * heur_flat.makespan)
+    if skip:
+        return A_inc, Allocation(
+            A=A_inc.copy(), makespan=makespan(A_inc, problem), solver=solver,
+            solve_time=time.perf_counter() - t0, optimal=False,
+            meta={"warm_start": "skipped", "warm_tol": warm_tol,
+                  "heuristic_bound": heur_flat.makespan},
+        )
+    return A_inc, None
 
 
 def proportional_allocation(problem: AllocationProblem) -> Allocation:

@@ -27,7 +27,7 @@ import scipy.sparse as sp
 from scipy.optimize import LinearConstraint, Bounds, milp
 
 from .allocation import SUPPORT_ATOL, Allocation, AllocationProblem, makespan
-from .heuristic import proportional_allocation
+from .heuristic import incumbent_shortcut, proportional_allocation
 
 __all__ = ["milp_allocation"]
 
@@ -60,7 +60,8 @@ def _build_relaxed(problem: AllocationProblem):
         ),
         shape=(mu, 2 * n + 1),
     )
-    lat_con = LinearConstraint(lat, lb=-np.inf, ub=np.zeros(mu))
+    # committed per-platform offsets shift each latency row's budget
+    lat_con = LinearConstraint(lat, lb=-np.inf, ub=-problem.offsets)
 
     # A[i,j] - B[i,j] <= 0   (n rows)
     link = sp.csr_matrix(
@@ -101,7 +102,7 @@ def _build_atomic(problem: AllocationProblem):
         ),
         shape=(mu, n + 1),
     )
-    lat_con = LinearConstraint(lat, lb=-np.inf, ub=np.zeros(mu))
+    lat_con = LinearConstraint(lat, lb=-np.inf, ub=-problem.offsets)
     integrality = np.concatenate([np.ones(n), np.zeros(1)])
     bounds = Bounds(
         lb=np.zeros(n + 1),
@@ -116,8 +117,23 @@ def milp_allocation(
     time_limit: float = 600.0,
     mip_rel_gap: float = 1e-4,
     atomic: bool = False,
+    incumbent: Allocation | None = None,
+    warm_tol: float = 0.05,
 ) -> Allocation:
+    """Solve eq. 12; ``incumbent`` enables the online warm-start early exit.
+
+    HiGHS via scipy takes no MIP start, so the incumbent's value here is
+    the skip test (:func:`incumbent_shortcut`): when the executing
+    allocation is already within ``warm_tol`` of the fresh heuristic bound
+    on the re-fitted problem, return it without solving.
+    """
     t0 = time.perf_counter()
+    warm_meta = {}
+    if incumbent is not None:
+        _, shortcut = incumbent_shortcut(problem, incumbent, "milp", warm_tol, t0)
+        if shortcut is not None:
+            return shortcut
+        warm_meta = {"warm_start": "solved"}
     mu, tau = problem.mu, problem.tau
     n = mu * tau
     if atomic:
@@ -140,7 +156,8 @@ def milp_allocation(
         return Allocation(
             A=heur.A, makespan=heur.makespan, solver="milp",
             solve_time=solve_time, optimal=False,
-            meta={"status": int(res.status), "fallback": "heuristic"},
+            meta={"status": int(res.status), "fallback": "heuristic",
+                  **warm_meta},
         )
 
     A = np.asarray(res.x[:n], dtype=np.float64).reshape(mu, tau)
@@ -162,5 +179,6 @@ def milp_allocation(
         optimal=bool(res.status == 0),
         bound=None if bound is None else float(bound),
         meta={"status": int(res.status), "mip_gap": None if gap is None else float(gap),
-              "node_count": int(getattr(res, "mip_node_count", -1) or -1)},
+              "node_count": int(getattr(res, "mip_node_count", -1) or -1),
+              **warm_meta},
     )

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.allocation import linear_work_reduction
 from repro.core.metrics import CombinedModel, LatencyModel, fit_latency_model
 from repro.runtime.domain import Domain, PlatformSpec, seed_for
+from repro.runtime.scenario import Scenario, apply_scenario, salvage_runs
 
 __all__ = [
     "LMRequest", "ServeRecord", "LMServingModel",
@@ -156,8 +157,10 @@ class _LMPlatformBase:
 
     def run_batch(self, reqs: Sequence[LMRequest], n_tokens,
                   seed: int = 0) -> list[ServeRecord]:
-        return [self.run(r, n, seed=seed)
-                for r, n in zip(reqs, _as_token_list(reqs, n_tokens))]
+        # an outage striking mid-batch re-raises with the completed records
+        # attached (see scenario.salvage_runs) so dispatchers keep them
+        return salvage_runs(lambda rn: self.run(rn[0], rn[1], seed=seed),
+                            list(zip(reqs, _as_token_list(reqs, n_tokens))))
 
 
 class LocalLMPlatform(_LMPlatformBase):
@@ -207,13 +210,23 @@ class SimulatedLMPlatform(_LMPlatformBase):
     """
 
     def __init__(self, spec: PlatformSpec, jitter: float = 0.02, seed: int = 0,
-                 realtime: float = 0.0):
+                 realtime: float = 0.0, scenario: Scenario | None = None):
         self.spec = spec
         self.jitter = jitter
         self._seed = seed
         #: sleep(latency * realtime) per run: occupy host wall clock so
         #: overlap benchmarks see true concurrency; records are unchanged.
         self.realtime = realtime
+        #: optional drift scenario, consulted at the platform's virtual
+        #: clock (cumulative replayed latency) — same hook as the pricing
+        #: simulator's.
+        self.scenario = scenario
+        self.clock = 0.0
+
+    def attach_scenario(self, scenario: Scenario | None) -> None:
+        """Attach (or clear) a scenario and rewind the virtual clock."""
+        self.scenario = scenario
+        self.clock = 0.0
 
     def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
         n = self._clamp(req, n_tokens)
@@ -226,6 +239,10 @@ class SimulatedLMPlatform(_LMPlatformBase):
         decode = n * ftok / (self.spec.gflops * 1e9)
         jitter = rng.lognormal(0.0, self.jitter)
         latency = (prefill + decode + self.spec.rtt_ms * 1e-3) * jitter
+        if self.scenario is not None:
+            stretched = apply_scenario(self, latency)
+            prefill *= stretched / max(latency, 1e-300)
+            latency = stretched
         if self.realtime:
             time.sleep(latency * self.realtime)
         return ServeRecord(self.spec.name, req.task_id, n, latency,
@@ -306,6 +323,9 @@ class LMServingDomain(Domain):
 
     def work_units(self, model: LMServingModel, quality: float) -> float:
         return float(quality)  # quality is measured in work units (tokens)
+
+    def record_units(self, record: ServeRecord) -> int:
+        return int(record.n_tokens)
 
     def dispatch_batch(self, platform, reqs: Sequence[LMRequest],
                        units: Sequence[int], seed: int = 0) -> list[ServeRecord]:

@@ -52,11 +52,24 @@ class PricingDomain(Domain):
         return benchmark_adaptive_batch(platform, tasks, seed=seed)
 
     def characterise(self, seed: int = 1, path_ladder=None, batched: bool = True,
-                     executor=None) -> dict[tuple[str, int], TaskPlatformModel]:
-        if not batched:  # legacy per-task loop, kept for A/B comparisons
-            return _platforms.characterise(self.platforms, self.tasks,
-                                           path_ladder, seed, batched=False)
-        return super().characterise(seed=seed, executor=executor,
+                     executor=None, tasks=None, platforms=None,
+                     record_sink=None,
+                     skip_unavailable: bool = False,
+                     ) -> dict[tuple[str, int], TaskPlatformModel]:
+        if not batched:
+            # legacy per-task loop, kept for A/B comparisons. It honours
+            # task/platform subsets (incremental arrivals) but cannot fill
+            # a record_sink — the legacy pipeline returns fitted models
+            # only, so online re-fit windows start empty under
+            # batched=False.
+            return _platforms.characterise(
+                self.platforms if platforms is None else list(platforms),
+                self.tasks if tasks is None else list(tasks),
+                path_ladder, seed, batched=False)
+        return super().characterise(seed=seed, executor=executor, tasks=tasks,
+                                    platforms=platforms,
+                                    record_sink=record_sink,
+                                    skip_unavailable=skip_unavailable,
                                     path_ladder=path_ladder)
 
     def fit_models(self, records: Sequence[RunRecord]) -> TaskPlatformModel:
@@ -66,6 +79,9 @@ class PricingDomain(Domain):
 
     def work_units(self, model: TaskPlatformModel, quality: float) -> float:
         return model.accuracy.paths_for_accuracy(quality)  # eq. 8 inverted
+
+    def record_units(self, record: RunRecord) -> int:
+        return int(record.n_paths)
 
     def dispatch_batch(self, platform, tasks: Sequence[PricingTask],
                        units: Sequence[int], seed: int = 0) -> list[RunRecord]:

@@ -45,6 +45,7 @@ from repro.core.metrics import (
     fit_latency_model,
 )
 from repro.runtime.domain import PlatformSpec
+from repro.runtime.scenario import Scenario, apply_scenario, salvage_runs
 from .contracts import Heston, PricingTask, group_by_launch
 from . import mc
 
@@ -211,24 +212,42 @@ class SimulatedPlatform:
     fraction of each replayed latency (``sleep(latency * realtime)``), so
     overlap benchmarks can observe true concurrent makespans without real
     remote hardware; the returned records are identical either way.
+
+    ``scenario`` attaches a :class:`repro.runtime.scenario.Scenario`: each
+    run consults it at the platform's virtual clock (cumulative replayed
+    latency) for slowdown factors and outage windows, so mid-workload drift
+    is reproducible without hardware. With no scenario the clock is not
+    tracked and behaviour is bit-for-bit the pre-scenario one.
     """
 
     def __init__(self, spec: PlatformSpec, jitter: float = 0.02,
                  moments: _TaskMoments | None = None, seed: int = 0,
-                 realtime: float = 0.0):
+                 realtime: float = 0.0, scenario: Scenario | None = None):
         self.spec = spec
         self.jitter = jitter
         self.moments = moments or _SHARED_MOMENTS
         self._seed = seed
         self.realtime = realtime
+        self.scenario = scenario
+        self.clock = 0.0
+
+    def attach_scenario(self, scenario: Scenario | None) -> None:
+        """Attach (or clear) a scenario and rewind the virtual clock —
+        fresh clocks let one scenario drive an A/B pair of runs."""
+        self.scenario = scenario
+        self.clock = 0.0
 
     def run_batch(self, tasks: Sequence[PricingTask], n_paths,
                   seed: int = 0) -> list[RunRecord]:
         """Batched replay: one family-batched *calibration* launch, then the
-        (cheap, analytic) per-task latency/accuracy model."""
+        (cheap, analytic) per-task latency/accuracy model.
+
+        An outage striking mid-batch re-raises with the completed records
+        attached (the virtual clock already ran them — see
+        :func:`repro.runtime.scenario.salvage_runs`)."""
         self.moments.prime(tasks)
-        return [self.run(t, n, seed=seed)
-                for t, n in zip(tasks, _as_path_list(tasks, n_paths))]
+        return salvage_runs(lambda tn: self.run(tn[0], tn[1], seed=seed),
+                            list(zip(tasks, _as_path_list(tasks, n_paths))))
 
     def run(self, task: PricingTask, n_paths: int, seed: int = 0) -> RunRecord:
         price_true, alpha = self.moments(task)
@@ -240,6 +259,7 @@ class SimulatedPlatform:
         flops = kflop_per_path(task) * 1e3 * n_paths
         compute = flops / (self.spec.gflops * 1e9)
         latency = (compute + self.spec.rtt_ms * 1e-3) * rng.lognormal(0.0, self.jitter)
+        latency = apply_scenario(self, latency)
         stderr = alpha / (2 * 1.96) / math.sqrt(n_paths)
         price = price_true + rng.normal(0.0, stderr)
         # measured CI wobbles with the sample variance estimate (chi^2_k/k)

@@ -11,10 +11,18 @@ generic :class:`Scheduler` that drives the loop over the shared
 """
 from .domain import Domain, PlatformSpec, RunRecordLike, seed_for  # noqa: F401
 from .executor import Executor, TimedResult  # noqa: F401
+from .online import (  # noqa: F401
+    DriftDetector,
+    OnlineConfig,
+    OnlineReport,
+    OnlineScheduler,
+)
+from .records import dump_records, group_records, load_records  # noqa: F401
 from .registry import (  # noqa: F401
     available_domains,
     domain_factory,
     make_domain,
     register_domain,
 )
-from .scheduler import SOLVERS, RuntimeReport, Scheduler  # noqa: F401
+from .scenario import PlatformOutage, Scenario  # noqa: F401
+from .scheduler import SOLVERS, DispatchResult, RuntimeReport, Scheduler  # noqa: F401

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.allocation import mc_work_reduction
 from .executor import Executor
+from .scenario import PlatformOutage
 
 __all__ = ["Domain", "PlatformSpec", "RunRecordLike", "seed_for"]
 
@@ -140,6 +141,10 @@ class Domain(abc.ABC):
         """Fit this domain's metric models from one task's rung records."""
 
     def characterise(self, seed: int = 1, executor: Executor | None = None,
+                     tasks: Sequence[Any] | None = None,
+                     platforms: Sequence[Any] | None = None,
+                     record_sink: dict | None = None,
+                     skip_unavailable: bool = False,
                      **kw) -> dict[tuple[str, int], Any]:
         """Benchmark every (platform, task) pair and fit its models.
 
@@ -151,21 +156,43 @@ class Domain(abc.ABC):
         wall-clock latencies the models are fitted from — the same
         granularity execute uses). Seeds must derive from each rung's
         coordinates (see :func:`seed_for`), never from loop position, so
-        both modes produce identical records."""
-        groups = self.group_tasks(self.tasks)
+        both modes produce identical records.
+
+        ``tasks`` / ``platforms`` restrict the sweep to subsets (incremental
+        characterisation of tasks arriving mid-workload, skipping platforms
+        known to be down); ``record_sink`` collects the raw benchmark
+        records per (platform, task_id) — the online loop seeds its re-fit
+        windows from them, and they are the characterise half of the JSONL
+        record persistence. Concurrent platform jobs write disjoint keys,
+        so a plain dict is safe.
+
+        ``skip_unavailable`` makes a platform raising
+        :class:`~repro.runtime.scenario.PlatformOutage` mid-benchmark
+        contribute only the pairs it completed instead of failing the
+        whole sweep — mid-run incremental characterisation is inherently
+        outage-exposed; the caller fills the gaps."""
+        groups = self.group_tasks(self.tasks if tasks is None else list(tasks))
+        sweep = self.platforms if platforms is None else list(platforms)
 
         def climb(p) -> dict[tuple[str, int], Any]:
             fitted: dict[tuple[str, int], Any] = {}
-            for _key, gtasks in groups:
-                rungs = self.characterise_batch(p, gtasks, seed=seed, **kw)
-                for k, t in enumerate(gtasks):
-                    fitted[(self.platform_name(p), t.task_id)] = self.fit_models(
-                        [rung[k] for rung in rungs])
+            try:
+                for _key, gtasks in groups:
+                    rungs = self.characterise_batch(p, gtasks, seed=seed, **kw)
+                    for k, t in enumerate(gtasks):
+                        key = (self.platform_name(p), t.task_id)
+                        recs = [rung[k] for rung in rungs]
+                        fitted[key] = self.fit_models(recs)
+                        if record_sink is not None:
+                            record_sink[key] = recs
+            except PlatformOutage:
+                if not skip_unavailable:
+                    raise
             return fitted
 
         out: dict[tuple[str, int], Any] = {}
         for fitted in (executor or Executor(mode="sequential")).map(
-                climb, self.platforms):
+                climb, sweep):
             out.update(fitted)  # job order == legacy platform-major order
         return out
 
@@ -173,6 +200,32 @@ class Domain(abc.ABC):
         """(delta, gamma) entries for the allocation matrices."""
         combined = model.combined
         return float(combined.delta), float(combined.gamma)
+
+    def predicted_latency(self, model, units: float) -> float:
+        """The latency the fitted model predicts for a shard of ``units``
+        work — the reference the online drift detector compares measured
+        latencies against. Default: the eq. 7 latency model every shipped
+        domain carries as ``model.latency``."""
+        return float(model.latency(units))
+
+    def latency_params(self, model) -> tuple[float, float]:
+        """(beta, gamma) of the model's latency component — the online
+        tranche planner uses them to floor shard sizes so per-dispatch
+        constants do not swamp high-RTT platforms under round-based
+        dispatch."""
+        return float(model.latency.beta), float(model.latency.gamma)
+
+    def record_units(self, record: RunRecordLike) -> int:
+        """Work units one execution record accounts for (remaining-work
+        accounting in the online loop). Default scans the common unit
+        field names; domains with other record shapes override."""
+        for attr in ("n_paths", "n_tokens", "units"):
+            value = getattr(record, attr, None)
+            if value is not None:
+                return int(value)
+        raise AttributeError(
+            f"{type(record).__name__} carries no recognised work-unit field; "
+            f"override {type(self).__name__}.record_units")
 
     # -- execution ---------------------------------------------------------
 

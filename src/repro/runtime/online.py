@@ -1,0 +1,623 @@
+"""Online re-allocation: the drift-aware feedback loop (closing Fig. 1).
+
+The paper's workflow is one-shot — characterise once, solve once, execute
+once — yet its own premise (§2) is that metric models are *populated at
+run time* and that execute-time records are the very shape
+characterisation consumes. The companion work (arXiv:1408.4965) frames the
+runtime as a continuously accessible service, and Memeti & Pllana
+(arXiv:1606.05134) measure re-optimising the work distribution mid-run
+paying off when system behaviour shifts. :class:`OnlineScheduler` closes
+that loop:
+
+    dispatch a tranche ──▶ records ──▶ fold into model windows
+         ▲                                   │
+         │                         drift? outage? arrivals?
+         │                                   │ yes
+    re-solve remaining work ◀── re-fit ◀─────┘
+    (incumbent warm start)
+
+Each round dispatches a tranche of the remaining work according to the
+current allocation (via :meth:`Scheduler.dispatch_plan`), folds the
+records back into per-(platform, task) windows, and watches a rolling
+predicted-vs-measured latency ratio per platform (:class:`DriftDetector`).
+Only when drift fires — or a platform dies (repeated dispatch failures),
+or tasks arrive — are the models re-fitted (``Domain.fit_models`` over the
+accumulated windows) and the allocation re-solved **for the remaining work
+only** (:func:`repro.core.restrict_problem`: surviving platforms, active
+tasks, work scaled by remaining fraction), with the executing allocation
+as warm-start incumbent so a re-solve that cannot improve matters is
+skipped (:func:`repro.core.heuristic.incumbent_shortcut`). An unperturbed
+run therefore solves exactly once.
+
+Round tranche sizes are *staggered* (alternating weights) so the
+execute-time records of any pair span distinct unit counts — what keeps
+the (beta, gamma) re-fit full-rank from tranche records alone — and are
+floored per (platform, task) so a high-RTT platform is not billed its
+constant every round for a sliver of work.
+
+Determinism: tranche seeds derive from (platform, launch key, round) via
+:func:`repro.runtime.domain.seed_for`, rounds are barriers, and each
+platform's work is serial inside its dispatch job, so concurrent and
+sequential online runs produce bitwise-identical records — drift, outages
+and all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Any, Hashable
+
+import numpy as np
+
+from repro.core import (
+    Allocation,
+    SUPPORT_ATOL,
+    expand_allocation,
+    restrict_allocation,
+    restrict_problem,
+)
+from repro.core.metrics import AccuracyModel, CombinedModel, LatencyModel
+from .domain import RunRecordLike, seed_for
+from .scenario import PlatformOutage, Scenario
+from .scheduler import SOLVERS, Scheduler
+
+__all__ = ["OnlineScheduler", "OnlineConfig", "OnlineReport", "DriftDetector",
+           "RoundLog"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    """Knobs of the feedback loop; defaults suit the shipped simulators."""
+
+    #: target number of dispatch tranches for a plan (late rounds flush
+    #: whatever remains, so a run takes ~rounds rounds absent failures).
+    rounds: int = 8
+    #: hard stop — a safety net against pathological non-progress.
+    max_rounds: int = 64
+    #: |median measured/predicted - 1| per platform that fires drift.
+    drift_threshold: float = 0.5
+    #: records per platform in the rolling drift window. Small on purpose:
+    #: the median flips only once half the window sits in the new regime,
+    #: so detection latency is ~window/2 records on the drifting platform.
+    drift_window: int = 6
+    #: observations required before a platform can fire.
+    min_drift_records: int = 3
+    #: consecutive failed rounds before a platform is declared dead.
+    outage_failures: int = 2
+    #: warm-start skip tolerance forwarded to the solvers on re-solves.
+    warm_tol: float = 0.05
+    #: records kept per (platform, task) re-fit window (characterise rungs
+    #: seed it; execute records push the stalest out).
+    refit_window: int = 32
+    #: alternating tranche weights — distinct per-round unit counts keep
+    #: the re-fit full-rank from execute records alone.
+    stagger: tuple[float, ...] = (1.25, 0.75)
+    #: per-dispatch work floor, in multiples of the pair's gamma constant:
+    #: a shard is grown until beta*units >= gamma_duty*gamma, consolidating
+    #: a high-RTT platform's share of a task into few large dispatches —
+    #: round-based dispatch pays gamma per visit, and without the floor a
+    #: platform like AWS EC1 (89 ms RTT) would be billed it every round.
+    #: 16 caps the constant at ~6% of each dispatch's work.
+    gamma_duty: float = 16.0
+
+
+#: effectively-infinite per-unit latency, but small enough that the MILP's
+#: constraint matrix stays numerically sane — 1e30-scale coefficients make
+#: HiGHS declare the model infeasible, silently degrading every re-solve
+#: to the heuristic fallback. 1e9 seconds/unit is ~9 orders above any real
+#: coefficient here while staying comfortably inside solver tolerances.
+_UNREACHABLE = 1e9
+
+
+class _UnreachableModel:
+    """Model placeholder for (dead platform, task) pairs.
+
+    Tasks arriving after a platform dies cannot be benchmarked there, yet
+    the scheduler's model matrices are total over platforms x tasks. This
+    placeholder keeps them total while guaranteeing no solver would ever
+    place work on the pair (and the online loop's restricted sub-problems
+    drop the dead rows before solving anyway). The accuracy model says the
+    pair needs ~no work so it never drives a task's remaining-work
+    fraction; its huge delta keeps any share away regardless."""
+
+    combined = CombinedModel(delta=_UNREACHABLE, gamma=0.0)
+    latency = LatencyModel(beta=_UNREACHABLE, gamma=0.0)
+    accuracy = AccuracyModel(alpha=1e-300)
+
+
+class DriftDetector:
+    """Rolling predicted-vs-measured latency ratios per platform.
+
+    Every executed record contributes ``measured / predicted`` under the
+    models the *current allocation was solved with* (re-fitting must not
+    wash out the signal it is meant to raise); a platform drifts when the
+    rolling **median** ratio strays from 1 by more than the threshold.
+    The median — not the mean — gates the decision deliberately: a lone
+    straggler record cannot trigger a re-solve, and by the time the median
+    moves, the majority of the window sits in the new regime, so the
+    median ratio doubles as an immediately usable drift-correction factor
+    for stale window records at re-fit time (a mean-gated detector fires
+    earlier but with a correction factor of ~1, wasting the re-solve).
+    """
+
+    def __init__(self, window: int = 8, threshold: float = 0.5,
+                 min_records: int = 3):
+        self.window = window
+        self.threshold = threshold
+        self.min_records = min_records
+        self._ratios: dict[str, deque[float]] = {}
+
+    def observe(self, platform: str, predicted: float, measured: float) -> None:
+        self._ratios.setdefault(platform, deque(maxlen=self.window)).append(
+            measured / max(predicted, 1e-12))
+
+    def error(self, platform: str) -> float:
+        """|median ratio - 1|: the rolling relative latency error."""
+        rs = self._ratios.get(platform)
+        if not rs:
+            return 0.0
+        return abs(self.median_ratio(platform) - 1.0)
+
+    def median_ratio(self, platform: str) -> float:
+        rs = self._ratios.get(platform)
+        return float(np.median(list(rs))) if rs else 1.0
+
+    def drifted(self, alive: dict[str, bool] | None = None) -> tuple[str, ...]:
+        fired = []
+        for pn, rs in self._ratios.items():
+            if alive is not None and not alive.get(pn, True):
+                continue
+            if len(rs) >= self.min_records and self.error(pn) > self.threshold:
+                fired.append(pn)
+        return tuple(sorted(fired))
+
+    def reset(self) -> None:
+        self._ratios.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundLog:
+    """What one feedback round did (the report's audit trail)."""
+
+    round: int
+    dispatched_units: dict[str, int]
+    drifted: tuple[str, ...]
+    failed: tuple[str, ...]
+    arrivals: int
+    resolved: bool
+    #: "solved" | "skipped" (warm-start early exit) | None (no re-solve).
+    solve_outcome: str | None
+
+
+@dataclasses.dataclass
+class OnlineReport:
+    """Outcome of an online run: final state plus the adaptation history."""
+
+    allocation: Allocation
+    predicted_makespan: float       # the initial solve's prediction
+    measured_makespan: float        # max over platforms of summed latency
+    platform_latencies: dict[str, float]
+    records: list[RunRecordLike]
+    summary: dict = dataclasses.field(default_factory=dict)
+    rounds: list[RoundLog] = dataclasses.field(default_factory=list)
+    n_solves: int = 0               # total solves (initial + re-solves)
+    n_resolves: int = 0             # re-solves that actually ran a solver
+    n_skipped: int = 0              # re-solves short-circuited by warm start
+    n_refits: int = 0               # model re-fit passes
+    solve_wall_s: float = 0.0       # wall time inside solvers, initial incl.
+    resolve_wall_s: float = 0.0     # wall time of mid-run re-solves only
+    dead_platforms: tuple[str, ...] = ()
+    arrivals: int = 0
+    platform_wall_s: dict[str, float] = dataclasses.field(default_factory=dict)
+    wall_s: float = 0.0
+    mode: str = "sequential"
+
+    @property
+    def makespan_error(self) -> float:
+        """Initial-model prediction error — under drift this is exactly the
+        gap adaptation closes for the *allocation*, not the forecast."""
+        if self.measured_makespan == 0:
+            return math.inf
+        return abs(self.predicted_makespan - self.measured_makespan) / self.measured_makespan
+
+
+class OnlineScheduler:
+    """Executes a workload in drift-aware rounds over a :class:`Scheduler`.
+
+        online = OnlineScheduler(Scheduler(make_domain("pricing", tasks,
+                                                       platforms)))
+        report = online.run(quality=0.05, method="milp")
+
+    Platform perturbations (slowdowns, outages) live on the simulated
+    platforms via ``attach_scenario``; pass the same :class:`Scenario`
+    to :meth:`run` only so queued *arrivals* can join the workload.
+    """
+
+    def __init__(self, scheduler: Scheduler, config: OnlineConfig | None = None):
+        self.scheduler = scheduler
+        self.config = config or OnlineConfig()
+
+    # -- helpers -----------------------------------------------------------
+
+    @property
+    def domain(self):
+        return self.scheduler.domain
+
+    def _solve(self, quality, method: str, solver_kw: dict,
+               alive: dict[str, bool], done: dict[int, float],
+               incumbent_A: np.ndarray | None,
+               elapsed: dict[str, float] | None = None):
+        """(Re-)solve the allocation over the remaining work only.
+
+        Returns (allocation, A_full, quotas) — A_full is the sub-solution
+        expanded back to the full frame (zero rows for dead platforms,
+        zero columns for completed tasks) and ``quotas`` maps each
+        supported (platform, task_id) pair to the work units it owes:
+        ``ceil(share * remaining_i(task))`` under *that platform's own*
+        quality->work inversion, exactly the unit accounting the one-shot
+        :meth:`Scheduler.shards` uses. Rounds then drain quotas, so an
+        unperturbed online run dispatches the same totals per pair as a
+        single execute pass (± one unit of per-tranche rounding).
+        """
+        domain, sched = self.domain, self.scheduler
+        c = sched.quality_vector(quality)
+        problem = sched.problem(quality)
+        rows = [i for i, p in enumerate(domain.platforms)
+                if alive[domain.platform_name(p)]]
+        if not rows:
+            raise RuntimeError("every platform is down; cannot re-allocate")
+        # per-(platform, task) totals and remaining under each platform's
+        # own fitted model; a task stays active while any surviving
+        # platform's inversion says work is outstanding
+        totals: dict[tuple[str, int], float] = {}
+        frac_by_col: dict[int, float] = {}
+        for j, t in enumerate(domain.tasks):
+            best = 0.0
+            for i in rows:
+                pname = domain.platform_name(domain.platforms[i])
+                total = max(domain.work_units(
+                    sched.models[(pname, t.task_id)], float(c[j])), 1e-12)
+                totals[(pname, t.task_id)] = total
+                rem = max(total - done.get(t.task_id, 0.0), 0.0)
+                best = max(best, rem / total)
+            if best > 0:
+                frac_by_col[j] = min(best, 1.0)
+        cols = sorted(frac_by_col)
+        if not cols:
+            return None, None, {}
+        # each platform's elapsed busy time rides along as its offset, so
+        # the re-solve minimises *finish* time — completed shares are fixed
+        # history the remaining work must be balanced around
+        offsets = np.array([
+            (elapsed or {}).get(domain.platform_name(p), 0.0)
+            for p in domain.platforms])
+        sub = restrict_problem(problem, rows, cols,
+                               [frac_by_col[j] for j in cols],
+                               offsets=offsets)
+        kw = dict(solver_kw)
+        if incumbent_A is not None and method in ("milp", "ml"):
+            kw["incumbent"] = restrict_allocation(incumbent_A, rows, cols)
+            kw.setdefault("warm_tol", self.config.warm_tol)
+        alloc = SOLVERS[method](sub, **kw)
+        A_full = expand_allocation(alloc.A, problem.mu, problem.tau, rows, cols)
+        quotas: dict[tuple[str, int], float] = {}
+        for i in rows:
+            pname = domain.platform_name(domain.platforms[i])
+            for j in cols:
+                tid = domain.tasks[j].task_id
+                share = A_full[i, j]
+                if share <= SUPPORT_ATOL:
+                    continue
+                rem = max(totals[(pname, tid)] - done.get(tid, 0.0), 0.0)
+                quota = float(np.ceil(share * rem))
+                if quota > 0:
+                    quotas[(pname, tid)] = quota
+        return alloc, A_full, quotas
+
+    def _plan_round(self, quotas: dict[tuple[str, int], float],
+                    alive: dict[str, bool], round_idx: int,
+                    solve_models: dict) -> list[tuple[Any, list[list[tuple[Any, int]]]]]:
+        """Turn the outstanding quotas into this round's dispatch tranche."""
+        cfg, domain = self.config, self.domain
+        rounds_left = max(cfg.rounds - round_idx, 1)
+        w = cfg.stagger[round_idx % len(cfg.stagger)] if cfg.stagger else 1.0
+        # the final planned round flushes everything — a sub-1 stagger
+        # weight there would leak a sliver into an extra leftover round
+        frac = 1.0 if rounds_left == 1 else min(w / rounds_left, 1.0)
+        plan = []
+        for p in domain.platforms:
+            pname = domain.platform_name(p)
+            if not alive[pname]:
+                continue
+            groups: dict[Hashable, list[tuple[Any, int]]] = {}
+            for t in domain.tasks:
+                quota = quotas.get((pname, t.task_id), 0.0)
+                if quota <= 0:
+                    continue
+                planned = quota * frac
+                beta, gamma = domain.latency_params(
+                    solve_models[(pname, t.task_id)])
+                # consolidation floor: do not pay the per-dispatch constant
+                # for a shard whose work does not dwarf it
+                floor = cfg.gamma_duty * gamma / max(beta, 1e-300)
+                units = int(np.ceil(min(
+                    max(planned, floor, float(domain.min_chunk)), quota)))
+                if units <= 0:
+                    continue
+                groups.setdefault(domain.launch_key(t), []).append((t, units))
+            if groups:
+                plan.append((p, list(groups.values())))
+        return plan
+
+    def _heal_unreachable(self, alive: dict[str, bool], mode,
+                          characterise_kw: dict | None) -> None:
+        """Retry characterisation of placeholder pairs on living platforms.
+
+        A task arriving while a platform sits in a *transient* outage gets
+        an :class:`_UnreachableModel` there; once the platform is back the
+        placeholder would otherwise stick forever — harmless to MILP/ML
+        (they just avoid the pair) but poisonous to the proportional
+        heuristic, whose per-platform share folds every task's work into
+        one latency. Each re-solve therefore re-benchmarks the stale pairs
+        (outage-tolerant: still-down platforms keep their placeholder)."""
+        sched, domain = self.scheduler, self.domain
+        stale: dict[str, list] = {}
+        for p in domain.platforms:
+            pname = domain.platform_name(p)
+            if not alive[pname]:
+                continue
+            for t in domain.tasks:
+                if isinstance(sched.models.get((pname, t.task_id)),
+                              _UnreachableModel):
+                    stale.setdefault(pname, []).append(t)
+        for p in domain.platforms:
+            pname = domain.platform_name(p)
+            if pname in stale:
+                sched.characterise_tasks(stale[pname], mode=mode,
+                                         platforms=[p],
+                                         **(characterise_kw or {}))
+
+    def _refit(self, windows: dict, detector: DriftDetector,
+               drifted: tuple[str, ...], alive: dict[str, bool],
+               solve_models: dict) -> None:
+        """Fold the accumulated record windows back into the metric models.
+
+        For a drifted platform the window straddles two regimes, and fresh
+        tranche records alone may not identify (beta, gamma) — a pair often
+        repeats one shard size. So stale records (those whose own
+        measured/predicted ratio sits far from the platform's median) are
+        *projected onto the new regime's line*: latency replaced by
+        ``model(units) * median_ratio``. They keep their unit-count spread
+        (anchoring the slope/intercept split) while the genuinely fresh
+        records supply the new level. Non-drifted platforms refit from
+        their raw windows — the routine fold of execute-time evidence.
+        """
+        updates: dict[tuple[str, int], list] = {}
+        for key, win in windows.items():
+            pname, _tid = key
+            if not alive[pname]:
+                continue
+            recs = list(win)
+            # tasks that arrived this round have no solve-time model yet;
+            # their windows (fresh characterise rungs) pass through raw
+            model = solve_models.get(key)
+            if pname in drifted and recs and model is not None:
+                med = detector.median_ratio(pname)
+                fixed = []
+                for r in recs:
+                    pred = self.domain.predicted_latency(
+                        model, self.domain.record_units(r))
+                    ratio = r.latency / max(pred, 1e-12)
+                    if med > 0 and abs(ratio - med) / med > 0.5:
+                        r = dataclasses.replace(r, latency=pred * med)
+                    fixed.append(r)
+                recs = fixed
+            updates[key] = recs
+        self.scheduler.refit(updates)
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, quality=None, method: str = "milp", seed: int = 3,
+            mode: str | None = None, scenario: Scenario | None = None,
+            characterise_kw: dict | None = None, **solver_kw) -> OnlineReport:
+        """Execute the workload in rounds; adapt only when evidence demands.
+
+        ``scenario`` here feeds *task arrivals* into the loop (slowdowns
+        and outages act through the platforms they are attached to); a
+        task joins once the workload's elapsed virtual makespan passes its
+        arrival time, is characterised incrementally, and forces a
+        re-solve so the new work is placed.
+        """
+        cfg, sched, domain = self.config, self.scheduler, self.domain
+        t_run = time.perf_counter()
+        if scenario is not None:
+            # the arrival cursor belongs to a run, not the scenario object,
+            # so rewind it here. (Replaying a scenario across runs also
+            # needs fresh platform virtual clocks — re-attach it via each
+            # simulator's attach_scenario; this loop is domain-agnostic and
+            # cannot reach them.)
+            scenario.reset()
+            if scenario.pending_arrivals and quality is not None and np.ndim(quality) > 0:
+                raise ValueError(
+                    "streaming arrivals need a scalar quality or the domain "
+                    "default — a per-task quality vector cannot be extended "
+                    "for tasks that join mid-workload")
+        if sched.models is None:
+            sched.characterise(mode=mode, **(characterise_kw or {}))
+
+        alive = {domain.platform_name(p): True for p in domain.platforms}
+        fail_count: dict[str, int] = {pn: 0 for pn in alive}
+        done: dict[int, float] = {}
+        windows: dict[tuple[str, int], deque] = {
+            key: deque(recs, maxlen=cfg.refit_window)
+            for key, recs in sched.characterise_records.items()}
+        detector = DriftDetector(cfg.drift_window, cfg.drift_threshold,
+                                 cfg.min_drift_records)
+
+        solve_t0 = time.perf_counter()
+        alloc, A_full, quotas = self._solve(
+            quality, method, solver_kw, alive, done, incumbent_A=None)
+        solve_wall = time.perf_counter() - solve_t0
+        resolve_wall = 0.0
+        if alloc is None:
+            raise ValueError("workload has no remaining work to execute")
+        predicted0 = alloc.makespan
+        solve_models = dict(sched.models)
+        n_solves, n_resolves, n_skipped, n_refits, n_arrivals = 1, 0, 0, 0, 0
+
+        all_records: list[RunRecordLike] = []
+        plat_lat = {pn: 0.0 for pn in alive}
+        plat_wall = {pn: 0.0 for pn in alive}
+        rounds: list[RoundLog] = []
+
+        for round_idx in range(cfg.max_rounds):
+            if not any(q > 0 for q in quotas.values()):
+                # drain the arrival queue: no more work means virtual time
+                # cannot advance to reach stragglers, so they join now
+                if scenario is not None and scenario.pending_arrivals:
+                    late = scenario.take_arrivals(0.0, force=True)
+                else:
+                    break
+            else:
+                late = []
+
+            plan = self._plan_round(quotas, alive, round_idx, solve_models)
+            results, _round_wall = ([], 0.0) if not plan else sched.dispatch_plan(
+                plan,
+                seed=lambda pn, key, _r=round_idx: seed_for(seed, pn, key, _r),
+                mode=mode, catch=(PlatformOutage,))
+
+            dispatched: dict[str, int] = {}
+            failed: list[str] = []
+            for (p, _groups), res in zip(plan, results):
+                pname = domain.platform_name(p)
+                plat_wall[pname] += res.wall_s
+                for rec in res.records:
+                    all_records.append(rec)
+                    plat_lat[pname] += rec.latency
+                    units = domain.record_units(rec)
+                    dispatched[pname] = dispatched.get(pname, 0) + units
+                    done[rec.task_id] = done.get(rec.task_id, 0.0) + units
+                    key = (pname, rec.task_id)
+                    quotas[key] = max(quotas.get(key, 0.0) - units, 0.0)
+                    windows.setdefault(
+                        key, deque(maxlen=cfg.refit_window)).append(rec)
+                    detector.observe(
+                        pname,
+                        domain.predicted_latency(solve_models[key], units),
+                        rec.latency)
+                if res.error is not None:
+                    failed.append(pname)
+                    fail_count[pname] += 1
+
+            # any round a platform does NOT fail — dispatching cleanly or
+            # sitting idle — breaks its failure streak: the death gate
+            # counts *consecutive* failed rounds, so two isolated hiccups
+            # separated by quiet rounds must not accumulate
+            for pn in fail_count:
+                if pn not in failed:
+                    fail_count[pn] = 0
+
+            newly_dead = [pn for pn in failed
+                          if alive[pn] and fail_count[pn] >= cfg.outage_failures]
+            for pn in newly_dead:
+                alive[pn] = False
+
+            elapsed = max(plat_lat.values(), default=0.0)
+            arrived = list(late)
+            if scenario is not None:
+                arrived += scenario.take_arrivals(elapsed)
+            # idempotent admission: a task already in the workload (e.g. a
+            # replayed scenario whose arrival joined permanently in an
+            # earlier run on this scheduler) is simply part of it
+            known = {t.task_id for t in domain.tasks}
+            arrived = [t for t in arrived if t.task_id not in known]
+            if arrived:
+                n_arrivals += len(arrived)
+                domain.tasks.extend(arrived)
+                # benchmark newcomers on the survivors only; any pair left
+                # unfitted (dead platform, or an outage firing mid-ladder
+                # on a not-yet-dead one) gets an unreachable placeholder so
+                # the model matrices stay total — those rows never reach a
+                # solver
+                survivors = [p for p in domain.platforms
+                             if alive[domain.platform_name(p)]]
+                sched.characterise_tasks(arrived, mode=mode,
+                                         platforms=survivors,
+                                         **(characterise_kw or {}))
+                for t in arrived:
+                    for p in domain.platforms:
+                        key = (domain.platform_name(p), t.task_id)
+                        if key not in sched.models:
+                            sched.models[key] = _UnreachableModel()
+                for key, recs in sched.characterise_records.items():
+                    windows.setdefault(key, deque(recs, maxlen=cfg.refit_window))
+                # incumbent gains zero columns for the newcomers; the
+                # restricted warm start falls back to uniform shares there
+                A_full = np.pad(A_full,
+                                ((0, 0), (0, len(domain.tasks) - A_full.shape[1])))
+
+            drifted = detector.drifted(alive)
+            outcome = None
+            resolved = False
+            if drifted or newly_dead or arrived:
+                self._heal_unreachable(alive, mode, characterise_kw)
+                self._refit(windows, detector, drifted, alive, solve_models)
+                n_refits += 1
+                solve_t0 = time.perf_counter()
+                alloc2, A2, quotas2 = self._solve(
+                    quality, method, solver_kw, alive, done,
+                    incumbent_A=A_full, elapsed=plat_lat)
+                dt = time.perf_counter() - solve_t0
+                resolve_wall += dt
+                solve_wall += dt
+                if alloc2 is not None:
+                    alloc, A_full, quotas = alloc2, A2, quotas2
+                    outcome = alloc.meta.get("warm_start", "solved")
+                    resolved = True
+                    n_solves += 1
+                    if outcome == "skipped":
+                        n_skipped += 1
+                    else:
+                        n_resolves += 1
+                else:
+                    # the re-fitted models say every task is already served
+                    quotas = {}
+                solve_models = dict(sched.models)
+                detector.reset()
+
+            rounds.append(RoundLog(
+                round=round_idx, dispatched_units=dispatched,
+                drifted=drifted, failed=tuple(failed), arrivals=len(arrived),
+                resolved=resolved, solve_outcome=outcome))
+
+        else:
+            if any(q > 0 for q in quotas.values()):
+                raise RuntimeError(
+                    f"online run exceeded max_rounds={cfg.max_rounds} with "
+                    f"work remaining — no progress on "
+                    f"{sorted(k for k, q in quotas.items() if q > 0)}")
+
+        problem = sched.problem(quality)
+        return OnlineReport(
+            allocation=alloc,
+            predicted_makespan=predicted0,
+            measured_makespan=max(plat_lat.values(), default=0.0),
+            platform_latencies=plat_lat,
+            records=all_records,
+            summary=domain.summarise(all_records, problem),
+            rounds=rounds,
+            n_solves=n_solves,
+            n_resolves=n_resolves,
+            n_skipped=n_skipped,
+            n_refits=n_refits,
+            solve_wall_s=solve_wall,
+            resolve_wall_s=resolve_wall,
+            dead_platforms=tuple(sorted(pn for pn, ok in alive.items() if not ok)),
+            arrivals=n_arrivals,
+            platform_wall_s=plat_wall,
+            wall_s=time.perf_counter() - t_run,
+            mode=sched._executor(mode).mode,
+        )

@@ -1,0 +1,91 @@
+"""JSONL persistence for execution records.
+
+Execute-time records are the same RunRecord shape characterisation
+consumes (paper §2, Fig. 1), which makes a recorded run *replayable*: dump
+an online run's records (``RuntimeReport.records`` /
+``OnlineReport.records`` / ``Scheduler.characterise_records``) to JSONL,
+load them back offline, and re-fit models or re-score allocations without
+touching a platform.
+
+One JSON object per line, ``{"kind": <record class name>, ...fields}``.
+Known record kinds resolve lazily (loading pricing records must not import
+the LM model zoo and vice versa); third-party domains register theirs with
+:func:`register_record_type`. Floats survive the round trip exactly —
+``json`` emits shortest-repr floats — so loaded records compare equal to
+the originals, which the replay tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import os
+from typing import Any, Iterable, Sequence
+
+__all__ = ["dump_records", "load_records", "group_records",
+           "register_record_type"]
+
+#: kind -> "module.path:ClassName" for the record types shipped in-repo.
+_BUILTIN: dict[str, str] = {
+    "RunRecord": "repro.pricing.platforms:RunRecord",
+    "ServeRecord": "repro.domains.lm_serving:ServeRecord",
+}
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_record_type(cls: type, name: str | None = None) -> None:
+    """Register a record dataclass so :func:`load_records` can revive it."""
+    _REGISTRY[name or cls.__name__] = cls
+
+
+def _resolve(kind: str) -> type:
+    if kind in _REGISTRY:
+        return _REGISTRY[kind]
+    path = _BUILTIN.get(kind)
+    if path is None:
+        raise KeyError(
+            f"unknown record kind {kind!r}; register it with "
+            f"register_record_type")
+    mod_name, _, attr = path.partition(":")
+    cls = getattr(importlib.import_module(mod_name), attr)
+    _REGISTRY[kind] = cls
+    return cls
+
+
+def dump_records(records: Iterable[Any], path: str | os.PathLike) -> int:
+    """Write records to ``path`` as JSONL; returns the number written."""
+    n = 0
+    with open(path, "w") as fh:
+        for rec in records:
+            if not dataclasses.is_dataclass(rec):
+                raise TypeError(
+                    f"records must be dataclasses, got {type(rec).__name__}")
+            row = {"kind": type(rec).__name__, **dataclasses.asdict(rec)}
+            fh.write(json.dumps(row) + "\n")
+            n += 1
+    return n
+
+
+def load_records(path: str | os.PathLike) -> list[Any]:
+    """Load a JSONL record dump back into typed record objects."""
+    out: list[Any] = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            cls = _resolve(row.pop("kind"))
+            out.append(cls(**row))
+    return out
+
+
+def group_records(records: Sequence[Any]) -> dict[tuple[str, int], list[Any]]:
+    """Group a flat record list per (platform, task_id) — the window shape
+    ``Scheduler.refit`` and ``Domain.fit_models`` consume when replaying a
+    dumped run offline."""
+    out: dict[tuple[str, int], list[Any]] = {}
+    for rec in records:
+        out.setdefault((rec.platform, rec.task_id), []).append(rec)
+    return out

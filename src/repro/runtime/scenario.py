@@ -1,0 +1,211 @@
+"""Deterministic perturbation scenarios for simulated platforms.
+
+The online re-allocation loop (:mod:`repro.runtime.online`) only earns its
+keep when system behaviour *shifts* mid-workload — the measurement-driven
+re-optimisation regime of Memeti & Pllana (arXiv:1606.05134). Real drift
+needs real hardware misbehaving on cue; a :class:`Scenario` replays it on
+the simulated platforms instead, as a seed-stable schedule keyed on each
+platform's own **virtual clock** (the cumulative latency of everything it
+has executed so far):
+
+    sc = (Scenario()
+          .slowdown("Local GPU 1", t=1.6, factor=4.0)   # degrade from t on
+          .outage("AWS Server EC1", t=2.0)              # dispatches fail
+          .arrive(t=0.8, task=extra_task))              # joins mid-workload
+
+Keying on virtual (not host) time makes a scenario a pure function of what
+was dispatched: concurrent and sequential runs see identical perturbations,
+so the online loop's bitwise mode parity survives drift injection. An
+outage makes ``run`` raise :class:`PlatformOutage` — the simulator advances
+the platform's clock by a retry cost per failed attempt so finite outage
+windows end after finitely many retries.
+
+Slowdowns and outages are consumed by the platforms
+(:class:`repro.pricing.platforms.SimulatedPlatform`,
+:class:`repro.domains.lm_serving.SimulatedLMPlatform` — see their
+``attach_scenario``); arrivals are consumed by the
+:class:`~repro.runtime.online.OnlineScheduler`, which admits queued tasks
+once the workload's elapsed virtual makespan passes their arrival time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+__all__ = ["Scenario", "PlatformOutage", "apply_scenario", "salvage_runs"]
+
+
+class PlatformOutage(RuntimeError):
+    """A dispatch hit a platform inside one of its scenario outage windows.
+
+    ``records`` carries whatever the failing batch completed before the
+    outage struck — the platform's virtual clock already advanced for that
+    work, so dispatchers salvage it instead of re-executing it."""
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        self.records: list[Any] = []
+
+
+def apply_scenario(platform, latency: float) -> float:
+    """One simulated run's scenario bookkeeping, shared by every simulator.
+
+    Consults ``platform.scenario`` at ``platform.clock``: inside an outage
+    window the attempt raises :class:`PlatformOutage` after advancing the
+    clock by a retry cost (a failed attempt still costs a round trip, so
+    finite windows end after finitely many retries); otherwise the clean
+    ``latency`` is stretched through the piecewise slowdown schedule and
+    the clock advanced by the result. With no scenario attached the
+    latency passes through untouched and no clock is tracked.
+    """
+    scenario = platform.scenario
+    if scenario is None:
+        return latency
+    name = platform.spec.name
+    if scenario.in_outage(name, platform.clock):
+        platform.clock += max(platform.spec.rtt_ms * 1e-3, 1e-3)
+        raise PlatformOutage(f"{name} is down at t={platform.clock:.3f}s")
+    latency = scenario.stretch(name, platform.clock, latency)
+    platform.clock += latency
+    return latency
+
+
+def salvage_runs(run_one, items) -> list:
+    """Map ``run_one`` over ``items``, salvaging partial output on outage.
+
+    When a :class:`PlatformOutage` interrupts the sweep the results
+    completed so far are attached to the exception (``.records``) before
+    it propagates — the platform's virtual clock already ran that work, so
+    dispatchers keep it in the accounting instead of re-executing it. The
+    batched ``run_batch`` loops of both simulators share this one copy.
+    """
+    out = []
+    for item in items:
+        try:
+            out.append(run_one(item))
+        except PlatformOutage as exc:
+            exc.records = out + exc.records
+            raise
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class _Window:
+    platform: str
+    start: float
+    end: float
+    factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _Arrival:
+    time: float
+    task: Any
+
+
+class Scenario:
+    """A deterministic schedule of platform perturbations and task arrivals.
+
+    Builder methods chain and return ``self``; the object is then shared by
+    every platform of a run (each queries only its own name) and by the
+    online scheduler (arrivals). ``reset()`` rewinds the arrival cursor so
+    the same scenario can drive an A/B pair of runs.
+    """
+
+    def __init__(self):
+        self._slowdowns: list[_Window] = []
+        self._outages: list[_Window] = []
+        self._arrivals: list[_Arrival] = []
+        self._admitted = 0
+
+    # -- builders ----------------------------------------------------------
+
+    def slowdown(self, platform: str, t: float, factor: float,
+                 end: float = math.inf) -> "Scenario":
+        """From virtual time ``t`` (to ``end``), scale the platform's
+        latencies by ``factor`` (> 1 degrades, < 1 speeds up)."""
+        if factor <= 0:
+            raise ValueError(f"slowdown factor must be > 0, got {factor}")
+        self._slowdowns.append(_Window(platform, t, end, factor))
+        return self
+
+    def outage(self, platform: str, t: float, end: float = math.inf) -> "Scenario":
+        """From virtual time ``t`` (to ``end``), dispatches to the platform
+        raise :class:`PlatformOutage` instead of running."""
+        self._outages.append(_Window(platform, t, end))
+        return self
+
+    def arrive(self, t: float, task: Any) -> "Scenario":
+        """Queue a task to join the workload once its elapsed virtual
+        makespan reaches ``t``."""
+        self._arrivals.append(_Arrival(t, task))
+        self._arrivals.sort(key=lambda a: a.time)
+        return self
+
+    # -- platform-side queries ---------------------------------------------
+
+    def factor(self, platform: str, t: float) -> float:
+        """Combined slowdown factor for a platform at virtual time ``t``."""
+        f = 1.0
+        for w in self._slowdowns:
+            if w.platform == platform and w.start <= t < w.end:
+                f *= w.factor
+        return f
+
+    def in_outage(self, platform: str, t: float) -> bool:
+        return any(w.platform == platform and w.start <= t < w.end
+                   for w in self._outages)
+
+    def stretch(self, platform: str, t0: float, clean: float) -> float:
+        """Wall-clock duration of ``clean`` seconds of unit-factor work
+        started at virtual time ``t0``.
+
+        The slowdown factor is piecewise-constant in virtual time, and a
+        run may straddle a boundary — a record half-executed when a 4x
+        slowdown lands costs half its clean time plus 4x the other half.
+        Integrating instead of sampling the factor at dispatch start keeps
+        coarse-grained runs (a one-shot execute's big shards) and
+        fine-grained ones (online tranches) on the same physics.
+        """
+        t, w = float(t0), float(clean)
+        while w > 1e-15:
+            f = self.factor(platform, t)
+            boundary = min(
+                (edge for win in self._slowdowns if win.platform == platform
+                 for edge in (win.start, win.end)
+                 if t < edge < math.inf),
+                default=None)
+            if boundary is None or t + w * f <= boundary:
+                t += w * f
+                break
+            w -= (boundary - t) / f  # clean work absorbed up to the edge
+            t = boundary
+        return t - t0
+
+    # -- scheduler-side queries --------------------------------------------
+
+    def take_arrivals(self, t: float, force: bool = False) -> list[Any]:
+        """Pop every queued task whose arrival time has passed.
+
+        ``force=True`` pops the whole queue regardless of ``t`` — used when
+        the workload drains before the clock reaches the stragglers (there
+        is no more work to advance virtual time, so they join immediately).
+        """
+        out = []
+        while self._admitted < len(self._arrivals):
+            nxt = self._arrivals[self._admitted]
+            if not force and nxt.time > t:
+                break
+            out.append(nxt.task)
+            self._admitted += 1
+        return out
+
+    @property
+    def pending_arrivals(self) -> int:
+        return len(self._arrivals) - self._admitted
+
+    def reset(self) -> "Scenario":
+        """Rewind the arrival cursor (for replaying the scenario)."""
+        self._admitted = 0
+        return self

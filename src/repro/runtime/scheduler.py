@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Hashable, Sequence
 
 import numpy as np
 
@@ -38,7 +38,7 @@ from repro.core import (
 from .domain import Domain, RunRecordLike
 from .executor import Executor
 
-__all__ = ["Scheduler", "RuntimeReport", "SOLVERS"]
+__all__ = ["Scheduler", "RuntimeReport", "DispatchResult", "SOLVERS"]
 
 #: The three allocation approaches of §4.3, shared by every domain.
 SOLVERS: dict[str, Callable[..., Allocation]] = {
@@ -46,6 +46,18 @@ SOLVERS: dict[str, Callable[..., Allocation]] = {
     "ml": lambda p, **kw: ml_allocation(p, **kw),
     "milp": lambda p, **kw: milp_allocation(p, **kw),
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchResult:
+    """One platform's slice of a dispatch plan: the records it produced,
+    its own wall clock, and — when the caller opted into partial dispatch
+    via ``catch`` — the exception that cut it short (records up to the
+    failure are kept, so remaining-work accounting stays exact)."""
+
+    records: list
+    wall_s: float
+    error: BaseException | None = None
 
 
 @dataclasses.dataclass
@@ -96,6 +108,10 @@ class Scheduler:
         self.domain = domain
         self.executor = Executor(mode=mode, max_workers=max_workers)
         self.models: dict[tuple[str, int], Any] | None = None
+        #: raw benchmark records per (platform, task_id) from the last
+        #: characterise pass — the online loop's re-fit windows start from
+        #: these, and runtime.records can persist them to JSONL.
+        self.characterise_records: dict[tuple[str, int], list[RunRecordLike]] = {}
         self._delta: np.ndarray | None = None
         self._gamma: np.ndarray | None = None
 
@@ -119,8 +135,48 @@ class Scheduler:
     # -- step 2: characterisation ------------------------------------------
 
     def characterise(self, seed: int = 1, mode: str | None = None, **kw) -> None:
+        sink: dict[tuple[str, int], list[RunRecordLike]] = {}
         self.models = self.domain.characterise(
-            seed=seed, executor=self._executor(mode), **kw)
+            seed=seed, executor=self._executor(mode), record_sink=sink, **kw)
+        self.characterise_records = sink
+        self._delta, self._gamma = self.model_matrices()
+
+    def characterise_tasks(self, tasks: Sequence[Any], seed: int = 1,
+                           mode: str | None = None,
+                           platforms: Sequence[Any] | None = None,
+                           **kw) -> None:
+        """Incrementally characterise tasks that joined mid-workload.
+
+        The tasks must already be in ``domain.tasks``; only the new
+        (platform, task) pairs are benchmarked — restricted to
+        ``platforms`` when given (the online loop skips platforms it has
+        declared dead) — their models and records merged into the existing
+        ones, and the matrices rebuilt. The caller is responsible for
+        filling models of any skipped (platform, task) pairs before the
+        matrices are consumed."""
+        assert self.models is not None, "characterise() first"
+        sink: dict[tuple[str, int], list[RunRecordLike]] = {}
+        fitted = self.domain.characterise(
+            seed=seed, executor=self._executor(mode), tasks=tasks,
+            platforms=platforms, record_sink=sink, skip_unavailable=True,
+            **kw)
+        self.models.update(fitted)
+        self.characterise_records.update(sink)
+        if platforms is None:
+            self._delta, self._gamma = self.model_matrices()
+
+    def refit(self, windows: dict[tuple[str, int], Sequence[RunRecordLike]]) -> None:
+        """Fold execute-time records back into the metric models.
+
+        Execute records are the same shape characterisation consumes (the
+        paper's premise, §2 Fig. 1), so re-fitting is just
+        ``Domain.fit_models`` over each pair's accumulated window; the
+        (delta, gamma) matrices are rebuilt so the next ``problem()`` sees
+        the drifted coefficients."""
+        assert self.models is not None, "characterise() first"
+        for key, recs in windows.items():
+            if recs:
+                self.models[key] = self.domain.fit_models(list(recs))
         self._delta, self._gamma = self.model_matrices()
 
     def model_matrices(self) -> tuple[np.ndarray, np.ndarray]:
@@ -182,39 +238,79 @@ class Scheduler:
             out.append((p, list(groups.values())))
         return out
 
+    def dispatch_plan(
+        self,
+        plan: Sequence[tuple[Any, list[list[tuple[Any, int]]]]],
+        seed: int | Callable[[str, Hashable], int] = 3,
+        mode: str | None = None,
+        catch: tuple[type[BaseException], ...] = (),
+    ) -> tuple[list[DispatchResult], float]:
+        """Dispatch an explicit per-platform plan; the partial-dispatch hook.
+
+        ``plan`` is a list of (platform, launch groups) where each group is
+        a list of (task, units) — the shape :meth:`shards` produces, but
+        callers (the online loop) may hand any tranche of the workload.
+        One job per platform: its groups run back-to-back on one thread
+        (they contend for the same device anyway) while distinct platforms
+        overlap, each timed by its own wall clock.
+
+        ``seed`` is either one int for every launch (the execute path) or a
+        callable ``(platform_name, launch_key) -> int`` so round-based
+        callers can derive per-(platform, group, round) seeds via
+        :func:`repro.runtime.domain.seed_for` — what keeps concurrent and
+        sequential online runs bitwise-identical.
+
+        Exception types in ``catch`` (e.g. ``PlatformOutage``) are captured
+        per platform into :attr:`DispatchResult.error` with the records
+        produced before the failure kept; anything else propagates.
+        """
+        executor = self._executor(mode)
+
+        def run_platform(shard) -> DispatchResult:
+            p, groups = shard
+            pname = self.domain.platform_name(p)
+            recs: list[RunRecordLike] = []
+            error: BaseException | None = None
+            for group in groups:
+                gtasks = [t for t, _ in group]
+                g_units = [u for _, u in group]
+                group_seed = (seed(pname, self.domain.launch_key(gtasks[0]))
+                              if callable(seed) else seed)
+                try:
+                    recs.extend(self.domain.dispatch_batch(
+                        p, gtasks, g_units, seed=group_seed))
+                except catch as exc:
+                    # a batch failing mid-way may carry the records it
+                    # completed first (see PlatformOutage.records) — that
+                    # work already ran, so keep it in the accounting
+                    recs.extend(getattr(exc, "records", []))
+                    error = exc
+                    break
+            return DispatchResult(records=recs, wall_s=0.0, error=error)
+
+        t0 = time.perf_counter()
+        timed = executor.map_timed(run_platform, plan)
+        wall_s = time.perf_counter() - t0
+        results = [dataclasses.replace(t.value, wall_s=t.wall_s) for t in timed]
+        return results, wall_s
+
     def execute(self, allocation: Allocation, quality=None, seed: int = 3,
                 mode: str | None = None) -> RuntimeReport:
         """Dispatch each platform's launch groups; concurrent by default.
 
-        One job per platform: its groups run back-to-back on one thread
-        (they contend for the same device anyway) while distinct platforms
-        overlap, each timed by its own wall clock. Records are collected
-        in platform-major order — identical to the sequential loop's."""
+        Records are collected in platform-major order — identical to the
+        sequential loop's (see :meth:`dispatch_plan`)."""
         problem = self.problem(quality)
-        executor = self._executor(mode)
         shards = self.shards(allocation, problem)
-
-        def run_platform(shard) -> list[RunRecordLike]:
-            p, groups = shard
-            recs: list[RunRecordLike] = []
-            for group in groups:
-                gtasks = [t for t, _ in group]
-                g_units = [u for _, u in group]
-                recs.extend(self.domain.dispatch_batch(p, gtasks, g_units,
-                                                       seed=seed))
-            return recs
-
-        t0 = time.perf_counter()
-        timed = executor.map_timed(run_platform, shards)
-        wall_s = time.perf_counter() - t0
+        results, wall_s = self.dispatch_plan(shards, seed=seed, mode=mode)
 
         records: list[RunRecordLike] = []
         plat_lat = {self.domain.platform_name(p): 0.0 for p in self.platforms}
         plat_wall: dict[str, float] = {}
-        for (p, _groups), result in zip(shards, timed):
+        for (p, _groups), result in zip(shards, results):
             pname = self.domain.platform_name(p)
             plat_wall[pname] = result.wall_s
-            for rec in result.value:
+            for rec in result.records:
                 records.append(rec)
                 plat_lat[pname] += rec.latency
         return RuntimeReport(
@@ -226,7 +322,7 @@ class Scheduler:
             summary=self.domain.summarise(records, problem),
             platform_wall_s=plat_wall,
             wall_s=wall_s,
-            mode=executor.mode,
+            mode=self._executor(mode).mode,
         )
 
     # -- convenience: the whole Fig. 1 flow --------------------------------

@@ -29,6 +29,15 @@ def test_serve_lm():
     assert "decode:" in r.stdout
 
 
+def test_adaptive_cluster():
+    # deliberately not slow-marked: the online re-allocation loop must be
+    # exercised by the fast CI leg (simulated platforms, ~seconds)
+    r = run(["examples/adaptive_cluster.py", "--tasks", "6"], timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "drift fired in rounds" in r.stdout
+    assert "adaptation speedup" in r.stdout
+
+
 @pytest.mark.slow
 def test_allocate_lm_fleet():
     r = run(["examples/allocate_lm_fleet.py", "--requests", "2"])
