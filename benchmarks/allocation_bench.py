@@ -13,6 +13,14 @@ the measured speedup is true wall-clock overlap, not bookkeeping: the
 sequential wall tracks the sum of per-platform latencies, the concurrent
 wall tracks their max (the paper's makespan semantics, §3).
 
+The ``capacity`` section (PR 5 onward) re-solves the same fitted instance
+with a second constraint dimension: every task consumes one resource unit
+per allocated share and every platform holds ``CAPACITY_SLOTS`` — a
+concurrent-working-set budget (the pricing analogue of LM serving's
+KV-cache bytes vs HBM). Tracked per solver: the unconstrained vs
+constrained makespan (the price of feasibility) and the number of
+oversubscribed platforms, which must be zero for all three.
+
 The ``online`` section (PR 4 onward) A/Bs static vs adaptive execution
 under the canonical drift scenario — the busiest platform slows
 ``SLOWDOWN_FACTOR``x at the static plan's half-makespan. The static leg
@@ -42,6 +50,11 @@ TIME_SCALE = 0.05
 #: plan's half-makespan.
 SLOWDOWN_FACTOR = 4.0
 ONLINE_ROUNDS = 8
+#: per-platform concurrent-working-set budget for the capacity section:
+#: each task consumes one unit per allocated share, so a platform can hold
+#: at most this many task-equivalents (16 tasks over 4 platforms must
+#: spread — the unconstrained optimum concentrates harder than this).
+CAPACITY_SLOTS = 5.0
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_allocation.json")
 
@@ -87,6 +100,46 @@ def main(fast: bool = True) -> None:
              f"makespan={alloc.makespan:.4f};"
              f"measured={rep.measured_makespan:.4f};"
              f"model_err={rep.makespan_error:.3f}")
+
+    # -- capacity: the second constraint dimension on the same instance --
+    import dataclasses
+
+    from repro.core import (
+        milp_allocation, ml_allocation, platform_usage, proportional_allocation,
+    )
+
+    base_problem = sched.problem(ACCURACY)
+    cap_problem = dataclasses.replace(
+        base_problem,
+        resource=np.ones((len(platforms), len(tasks))),
+        capacity=np.full(len(platforms), CAPACITY_SLOTS),
+    )
+    core_solvers = {
+        "heuristic": lambda p: proportional_allocation(p),
+        "ml": lambda p: ml_allocation(p, chains=16, steps=3000, rounds=1,
+                                      seed=0, time_limit=30 if fast else 600),
+        "milp": lambda p: milp_allocation(p, time_limit=30 if fast else 600),
+    }
+    capacity = {"slots_per_platform": CAPACITY_SLOTS, "solvers": {}}
+    for method, solve in core_solvers.items():
+        # the solvers section above already solved this exact fitted
+        # problem unconstrained — reuse its makespan rather than re-solving
+        un_makespan = solvers[method]["makespan"]
+        con = solve(cap_problem)
+        usage = platform_usage(con.A, cap_problem)
+        over = int((usage > cap_problem.capacity * (1 + 1e-6)).sum())
+        capacity["solvers"][method] = {
+            "unconstrained_makespan": un_makespan,
+            "constrained_makespan": con.makespan,
+            "makespan_ratio": con.makespan / un_makespan,
+            "max_usage": float(usage.max()),
+            "oversubscribed_platforms": over,
+            "solve_time_s": con.solve_time,
+        }
+        emit(f"allocation.capacity.{method}", con.solve_time * 1e6,
+             f"constrained={con.makespan:.4f};"
+             f"unconstrained={un_makespan:.4f};"
+             f"oversubscribed={over}")
 
     # -- overlap A/B: sequential vs concurrent dispatch, true wall clock --
     rt_platforms = [SimulatedPlatform(TABLE2_SPECS[i], moments=moments, seed=7,
@@ -182,6 +235,7 @@ def main(fast: bool = True) -> None:
                      "ladder": [1_024, 4_096, 16_384, 65_536]},
         "characterise_s": t_char.seconds,
         "solvers": solvers,
+        "capacity": capacity,
         "overlap": overlap,
         "online": online,
     }

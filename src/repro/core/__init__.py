@@ -14,12 +14,16 @@ from .allocation import (  # noqa: F401
     SUPPORT_ATOL,
     Allocation,
     AllocationProblem,
+    CapacityError,
+    assert_capacity_feasible,
+    capacity_ok,
     check_allocation,
     expand_allocation,
     linear_work_reduction,
     makespan,
     mc_work_reduction,
     platform_latencies,
+    platform_usage,
     restrict_allocation,
     restrict_problem,
 )

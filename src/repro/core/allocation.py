@@ -28,9 +28,13 @@ import numpy as np
 __all__ = [
     "AllocationProblem",
     "Allocation",
+    "CapacityError",
     "platform_latencies",
+    "platform_usage",
+    "capacity_ok",
     "makespan",
     "check_allocation",
+    "assert_capacity_feasible",
     "mc_work_reduction",
     "linear_work_reduction",
     "restrict_problem",
@@ -42,6 +46,19 @@ __all__ = [
 # An allocation entry below this is treated as "not allocated" for the
 # purposes of the ceil() indicator. Solvers snap-to-zero below it.
 SUPPORT_ATOL = 1e-9
+
+# Relative slack granted when checking capacity rows: resource units can be
+# bytes (1e6-scale), so tolerances must be multiplicative, not absolute.
+CAPACITY_RTOL = 1e-6
+
+
+class CapacityError(ValueError):
+    """The instance cannot be allocated within the platform capacities.
+
+    Raised by *every* solver (heuristic, ML, MILP) through the shared
+    :func:`assert_capacity_feasible` pre-check, so callers can catch one
+    typed error regardless of the method in play.
+    """
 
 
 # -- quality -> work reductions ---------------------------------------------
@@ -79,6 +96,16 @@ class AllocationProblem:
                 time here so the makespan being minimised is the *finish*
                 time, completed shares included, not just the remaining
                 load. All three solvers honour it.
+    resource : (mu, tau)  optional second constraint dimension: resource
+                units platform i holds while serving the *whole* of task j
+                (e.g. KV-cache bytes for an LM request) — consumption is
+                linear in the allocated share, so a platform serving
+                ``A[i, j]`` of the task holds ``resource[i, j] * A[i, j]``.
+    capacity : (mu,)   per-platform resource budget paired with
+                ``resource``; every solver keeps
+                ``(resource * A).sum(axis=1) <= capacity`` as a hard row
+                constraint, and raises :class:`CapacityError` when no
+                allocation can satisfy it.
     """
 
     delta: np.ndarray
@@ -86,6 +113,8 @@ class AllocationProblem:
     c: np.ndarray
     reduction: Callable[[np.ndarray, np.ndarray], np.ndarray] = mc_work_reduction
     offsets: np.ndarray | None = None
+    resource: np.ndarray | None = None
+    capacity: np.ndarray | None = None
 
     def __post_init__(self):
         delta = np.asarray(self.delta, dtype=np.float64)
@@ -103,10 +132,31 @@ class AllocationProblem:
             raise ValueError(f"offsets must be (mu,): {offsets.shape} vs mu={delta.shape[0]}")
         if (offsets < 0).any():
             raise ValueError("offsets must be >= 0")
+        if (self.resource is None) != (self.capacity is None):
+            raise ValueError("resource and capacity must be given together")
+        resource = capacity = None
+        if self.resource is not None:
+            resource = np.asarray(self.resource, dtype=np.float64)
+            capacity = np.asarray(self.capacity, dtype=np.float64)
+            if resource.shape != delta.shape:
+                raise ValueError(
+                    f"resource must match delta: {resource.shape} vs {delta.shape}")
+            if capacity.shape != (delta.shape[0],):
+                raise ValueError(
+                    f"capacity must be (mu,): {capacity.shape} vs mu={delta.shape[0]}")
+            if (resource < 0).any() or (capacity < 0).any():
+                raise ValueError("resource and capacity must be >= 0")
         object.__setattr__(self, "delta", delta)
         object.__setattr__(self, "gamma", gamma)
         object.__setattr__(self, "c", c)
         object.__setattr__(self, "offsets", offsets)
+        object.__setattr__(self, "resource", resource)
+        object.__setattr__(self, "capacity", capacity)
+
+    @property
+    def has_capacity(self) -> bool:
+        """True when the resource/capacity constraint dimension is active."""
+        return self.resource is not None and np.isfinite(self.capacity).any()
 
     @property
     def mu(self) -> int:
@@ -161,6 +211,66 @@ def makespan(A: np.ndarray, problem: AllocationProblem) -> float:
     return float(platform_latencies(A, problem).max())
 
 
+def platform_usage(A: np.ndarray, problem: AllocationProblem) -> np.ndarray:
+    """Per-platform resource consumption of an allocation: (R o A) . 1.
+
+    Zero everywhere when the problem carries no resource dimension."""
+    if problem.resource is None:
+        return np.zeros(problem.mu)
+    return (problem.resource * np.asarray(A, dtype=np.float64)).sum(axis=1)
+
+
+def capacity_ok(A: np.ndarray, problem: AllocationProblem,
+                rtol: float = CAPACITY_RTOL) -> bool:
+    """Does the allocation respect every platform's capacity row?"""
+    if problem.capacity is None:
+        return True
+    usage = platform_usage(A, problem)
+    return bool((usage <= problem.capacity * (1 + rtol) + rtol).all())
+
+
+def assert_capacity_feasible(problem: AllocationProblem) -> None:
+    """Raise :class:`CapacityError` when no allocation fits the capacities.
+
+    Shared pre-check of all three solvers (heuristic, ML, MILP) so an
+    infeasible instance produces the *same* typed error from every one of
+    them. Feasibility of {A >= 0, columns sum to 1, (R o A).1 <= capacity}
+    is a small transportation LP; a cheap necessary condition (even each
+    task's cheapest placement exceeds the summed capacity) short-circuits
+    the common aggregate-infeasible case with a precise message.
+    """
+    if not problem.has_capacity:
+        return
+    R, cap = problem.resource, problem.capacity
+    best_case = R.min(axis=0).sum()  # every task on its cheapest platform
+    total_cap = cap.sum()
+    if best_case > total_cap * (1 + CAPACITY_RTOL):
+        raise CapacityError(
+            f"workload needs >= {best_case:.6g} resource units even on each "
+            f"task's cheapest platform, but the fleet holds {total_cap:.6g}")
+    # exact check: feasibility LP over the shares (HiGHS, mu*tau variables;
+    # only the finite capacity rows can ever bind)
+    from scipy.optimize import linprog
+    import scipy.sparse as sp
+
+    mu, tau = problem.mu, problem.tau
+    n = mu * tau
+    jj = np.arange(n)
+    A_eq = sp.csr_matrix((np.ones(n), (jj % tau, jj)), shape=(tau, n))
+    finite = np.nonzero(np.isfinite(cap))[0]
+    rows = np.repeat(np.arange(finite.size), tau)
+    cols = (finite[:, None] * tau + np.arange(tau)[None, :]).ravel()
+    A_ub = sp.csr_matrix((R[finite].ravel(), (rows, cols)),
+                         shape=(finite.size, n))
+    res = linprog(np.zeros(n), A_ub=A_ub, b_ub=cap[finite], A_eq=A_eq,
+                  b_eq=np.ones(tau), bounds=(0, 1), method="highs")
+    if not res.success:
+        raise CapacityError(
+            "no allocation satisfies the per-platform capacities "
+            f"(capacity={np.array2string(cap, precision=4)}; LP status "
+            f"{res.status}: {res.message})")
+
+
 # -- sub-problems over remaining work (online re-allocation) -----------------
 #
 # Mid-workload, part of every task is already executed and some platforms may
@@ -176,6 +286,7 @@ def restrict_problem(
     tasks: Sequence[int] | None = None,
     remaining: Sequence[float] | None = None,
     offsets: Sequence[float] | None = None,
+    capacity: Sequence[float] | None = None,
 ) -> AllocationProblem:
     """Sub-problem over platform rows / task columns with remaining work.
 
@@ -188,12 +299,21 @@ def restrict_problem(
     busy time into the sub-problem, so the re-solve minimises finish time
     rather than piling remaining work onto a platform that is merely idle
     *in the sub-problem's frame*.
+
+    The resource dimension restricts the same way: kept resource columns
+    scale by ``remaining`` (consumption is linear in the outstanding
+    share), and ``capacity`` (full-frame, one per original platform)
+    overrides each platform's budget with whatever it has *left* — held
+    shards of still-active tasks are committed history a mid-run re-solve
+    must fit around, exactly as ``offsets`` carries elapsed time.
     """
     rows = np.arange(problem.mu) if platforms is None else np.asarray(platforms, dtype=int)
     cols = np.arange(problem.tau) if tasks is None else np.asarray(tasks, dtype=int)
     if rows.size == 0 or cols.size == 0:
         raise ValueError("restricted problem needs >= 1 platform and >= 1 task")
     delta = problem.delta[np.ix_(rows, cols)]
+    resource = (None if problem.resource is None
+                else problem.resource[np.ix_(rows, cols)])
     if remaining is not None:
         r = np.asarray(remaining, dtype=np.float64)
         if r.shape != (cols.size,):
@@ -201,10 +321,17 @@ def restrict_problem(
         if (r <= 0).any() or (r > 1 + 1e-9).any():
             raise ValueError("remaining fractions must be in (0, 1]")
         delta = delta * r[None, :]
+        if resource is not None:
+            resource = resource * r[None, :]
     off = problem.offsets if offsets is None else np.asarray(offsets, dtype=np.float64)
+    if capacity is not None and problem.resource is None:
+        raise ValueError("capacity override needs a problem with a resource matrix")
+    cap = problem.capacity if capacity is None else np.asarray(capacity, dtype=np.float64)
     return AllocationProblem(delta=delta, gamma=problem.gamma[np.ix_(rows, cols)],
                              c=problem.c[cols], reduction=problem.reduction,
-                             offsets=off[rows])
+                             offsets=off[rows],
+                             resource=resource,
+                             capacity=None if cap is None else cap[rows])
 
 
 def restrict_allocation(A: np.ndarray, platforms: Sequence[int],
@@ -241,9 +368,16 @@ def expand_allocation(A_sub: np.ndarray, mu: int, tau: int,
 
 
 def check_allocation(A: np.ndarray, problem: AllocationProblem, atol: float = 1e-6) -> None:
-    """Validate the eq. 10 constraints; raises AssertionError on violation."""
+    """Validate the eq. 10 constraints (and, when the problem carries a
+    resource dimension, the capacity rows); raises AssertionError on
+    violation."""
     A = np.asarray(A)
     assert A.shape == (problem.mu, problem.tau), (A.shape, problem.mu, problem.tau)
     assert (A >= -atol).all(), "negative allocation"
     col = A.sum(axis=0)
     assert np.allclose(col, 1.0, atol=atol), f"column sums != 1 (max err {np.abs(col - 1).max():.2e})"
+    if problem.capacity is not None:
+        usage = platform_usage(A, problem)
+        over = usage - problem.capacity
+        assert capacity_ok(A, problem, rtol=max(atol, CAPACITY_RTOL)), \
+            f"capacity exceeded (max over {over.max():.6g} units)"

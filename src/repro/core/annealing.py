@@ -19,6 +19,13 @@ the then-*linear* restriction of eq. 10 exactly with HiGHS
 (``scipy.optimize.linprog``): minimise t s.t. W∘A·1 + (gamma∘B)·1 <= t,
 columns of A sum to 1, supp(A) ⊆ B. Entries the LP drives to zero shrink
 the support, so the polish is iterated to a fixed point.
+
+Problems carrying the optional resource/capacity dimension anneal a
+*penalised* objective (relative capacity overflow, makespan-scaled) with
+repair-biased moves (overloaded platforms are preferred sources and
+avoided destinations), start every chain from a capacity-clamped seed, and
+polish with the capacity rows in the LP — so the returned allocation is
+always feasible.
 """
 from __future__ import annotations
 
@@ -32,8 +39,16 @@ from scipy.optimize import linprog
 import jax
 import jax.numpy as jnp
 
-from .allocation import SUPPORT_ATOL, Allocation, AllocationProblem, makespan
-from .heuristic import incumbent_shortcut, proportional_allocation
+from .allocation import (
+    CAPACITY_RTOL,
+    SUPPORT_ATOL,
+    Allocation,
+    AllocationProblem,
+    assert_capacity_feasible,
+    capacity_ok,
+    makespan,
+)
+from .heuristic import clamp_to_capacity, incumbent_shortcut, proportional_allocation
 
 __all__ = ["ml_allocation", "lp_polish", "anneal"]
 
@@ -42,30 +57,42 @@ __all__ = ["ml_allocation", "lp_polish", "anneal"]
 # JAX annealing kernel
 # --------------------------------------------------------------------------
 
-def _makespan_jnp(A, W, G, off, atol=SUPPORT_ATOL):
+def _objective_jnp(A, W, G, off, R, cap_safe, rho, atol=SUPPORT_ATOL):
+    """Penalised makespan: eq. 10 plus a relative capacity-overflow term.
+
+    ``cap_safe`` is the capacity vector with non-finite/zero entries
+    replaced by a sentinel that makes the relative overflow 0/negative, so
+    capacity-free problems pay nothing. ``rho`` carries the makespan scale
+    (resource units can be bytes — the penalty must be scale-free)."""
     support = A > atol
     H = (W * A).sum(axis=1) + jnp.where(support, G, 0.0).sum(axis=1) + off
-    return H.max()
+    over = jnp.maximum((R * A).sum(axis=1) / cap_safe - 1.0, 0.0)
+    return H.max() + rho * over.sum()
 
 
-def _anneal_chain(A0, W, G, off, key, steps: int, T0: float, Tf: float):
+def _anneal_chain(A0, W, G, off, R, cap_safe, rho, key,
+                  steps: int, T0: float, Tf: float):
     """One SA chain; vmapped over (A0, key) by :func:`anneal`."""
     mu, tau = W.shape
-    m0 = _makespan_jnp(A0, W, G, off)
+    m0 = _objective_jnp(A0, W, G, off, R, cap_safe, rho)
 
     def body(k, state):
         A, m_cur, best_A, best_m, key = state
         key, k1, k2, k3, k4, k5, k6 = jax.random.split(key, 7)
         j = jax.random.randint(k1, (), 0, tau)
+        # repair bias: overloaded platforms are preferred sources and
+        # avoided destinations (zero bias when no capacity row binds)
+        over = (R * A).sum(axis=1) / cap_safe - 1.0
+        bias = jnp.where(over > 0, 4.0, 0.0)
         # source ∝ current share (never samples an empty platform when any
-        # mass exists in the column); destination uniform.
-        src = jax.random.categorical(k2, logits=jnp.log(A[:, j] + 1e-12))
-        dst = jax.random.randint(k3, (), 0, mu)
+        # mass exists in the column); destination uniform among the rest.
+        src = jax.random.categorical(k2, logits=jnp.log(A[:, j] + 1e-12) + bias)
+        dst = jax.random.categorical(k3, logits=-bias)
         move_all = jax.random.bernoulli(k4, 0.5)
         frac = jnp.where(move_all, 1.0, jax.random.uniform(k5))
         amount = A[src, j] * frac
         A_new = A.at[src, j].add(-amount).at[dst, j].add(amount)
-        m_new = _makespan_jnp(A_new, W, G, off)
+        m_new = _objective_jnp(A_new, W, G, off, R, cap_safe, rho)
         # geometric temperature schedule
         T = T0 * (Tf / T0) ** (k / steps)
         accept = (m_new < m_cur) | (
@@ -84,8 +111,9 @@ def _anneal_chain(A0, W, G, off, key, steps: int, T0: float, Tf: float):
 
 
 _anneal_batch = jax.jit(
-    jax.vmap(_anneal_chain, in_axes=(0, None, None, None, 0, None, None, None)),
-    static_argnums=(5,),
+    jax.vmap(_anneal_chain,
+             in_axes=(0, None, None, None, None, None, None, 0, None, None, None)),
+    static_argnums=(8,),
 )
 
 
@@ -100,7 +128,8 @@ def anneal(
 ) -> tuple[np.ndarray, np.ndarray]:
     """Run one SA round over a batch of start allocations.
 
-    Returns (best allocations [chains, mu, tau], best makespans [chains]).
+    Returns (best allocations [chains, mu, tau], best penalised objectives
+    [chains] — equal to the makespan for capacity-feasible results).
     """
     W = jnp.asarray(problem.work, dtype=jnp.float32)
     G = jnp.asarray(problem.gamma, dtype=jnp.float32)
@@ -113,9 +142,22 @@ def anneal(
     # T0 would accept everything (random walk) through most of the schedule
     m_start = makespan(A_starts[0],
                        dataclasses.replace(problem, offsets=None))
+    if problem.capacity is not None:
+        R = jnp.asarray(problem.resource, dtype=jnp.float32)
+        cap = np.where(problem.capacity > 0, problem.capacity, 1e-30)
+        cap_safe = jnp.asarray(cap, dtype=jnp.float32)
+        # a row 10% over its budget costs ~40% of a makespan — steep enough
+        # that the schedule anneals into the feasible region, shallow enough
+        # that chains can tunnel through it early on
+        rho = jnp.float32(4.0 * max(m_start, 1e-30))
+    else:
+        R = jnp.zeros_like(W)
+        cap_safe = jnp.full((problem.mu,), jnp.inf, dtype=jnp.float32)
+        rho = jnp.float32(0.0)
     keys = jax.random.split(jax.random.PRNGKey(seed), chains)
     best_A, best_m = _anneal_batch(
-        A0, W, G, off, keys, steps, m_start * T0_frac, m_start * Tf_frac
+        A0, W, G, off, R, cap_safe, rho, keys, steps,
+        m_start * T0_frac, m_start * Tf_frac
     )
     return np.asarray(best_A, dtype=np.float64), np.asarray(best_m, dtype=np.float64)
 
@@ -127,8 +169,10 @@ def anneal(
 def lp_polish(problem: AllocationProblem, support: np.ndarray) -> tuple[np.ndarray, float] | None:
     """Solve eq. 10 restricted to a fixed support exactly (it is an LP).
 
-    Variables: one share per support entry plus the makespan t. Returns
-    (A, makespan) or None if the LP is infeasible/failed.
+    Variables: one share per support entry plus the makespan t; the
+    problem's capacity rows (when present) ride along as plain
+    inequalities, so a polished allocation stays capacity-feasible.
+    Returns (A, makespan) or None if the LP is infeasible/failed.
     """
     support = np.asarray(support, dtype=bool)
     mu, tau = support.shape
@@ -158,6 +202,19 @@ def lp_polish(problem: AllocationProblem, support: np.ndarray) -> tuple[np.ndarr
         shape=(mu, nnz + 1),
     )
     b_ub = -gamma_const - problem.offsets
+    if problem.has_capacity:
+        # capacity rows: sum_j R_ij A_ij <= capacity_i over the support
+        # (finite budgets only — linprog rejects inf right-hand sides)
+        finite = np.isfinite(problem.capacity)
+        row_map = np.cumsum(finite) - 1
+        keep = finite[rows]
+        res_rows = sp.csr_matrix(
+            (problem.resource[rows, cols][keep],
+             (row_map[rows[keep]], np.nonzero(keep)[0])),
+            shape=(int(finite.sum()), nnz + 1),
+        )
+        A_ub = sp.vstack([A_ub, res_rows], format="csr")
+        b_ub = np.concatenate([b_ub, problem.capacity[finite]])
 
     bounds = [(0, 1)] * nnz + [(0, None)]
     res = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
@@ -172,8 +229,15 @@ def lp_polish(problem: AllocationProblem, support: np.ndarray) -> tuple[np.ndarr
 
 
 def _iterated_polish(problem: AllocationProblem, A: np.ndarray, max_iters: int = 4):
-    """Polish, prune entries the LP zeroed, and re-polish to a fixed point."""
-    best_A, best_m = A, makespan(A, problem)
+    """Polish, prune entries the LP zeroed, and re-polish to a fixed point.
+
+    A capacity-violating input only counts once the LP (which carries the
+    capacity rows) has projected it into the feasible region; returns
+    (None, inf) when that never happens."""
+    if capacity_ok(A, problem):
+        best_A, best_m = A, makespan(A, problem)
+    else:
+        best_A, best_m = None, np.inf
     support = A > SUPPORT_ATOL
     for _ in range(max_iters):
         out = lp_polish(problem, support)
@@ -213,32 +277,37 @@ def ml_allocation(
     allocation as well as from scratch.
     """
     t_start = time.perf_counter()
+    assert_capacity_feasible(problem)
     warm_meta = {}
     A_inc = None
     if incumbent is not None:
-        A_inc, shortcut = incumbent_shortcut(problem, incumbent, "ml",
-                                             warm_tol, t_start)
+        A_inc, shortcut, warm_meta = incumbent_shortcut(
+            problem, incumbent, "ml", warm_tol, t_start)
         if shortcut is not None:
             return shortcut
-        warm_meta = {"warm_start": "solved"}
+        if warm_meta.get("warm_start") == "rejected":
+            # the executing plan violates the (remaining) capacities —
+            # repair it before it seeds anything
+            A_inc = clamp_to_capacity(A_inc, problem)
     rng = np.random.default_rng(seed)
     heur = proportional_allocation(problem)
     mu, tau = problem.mu, problem.tau
 
     # Chain starts: the heuristic, plus atomic random assignments (sparse
-    # supports let the SA explore the low-gamma region immediately).
+    # supports let the SA explore the low-gamma region immediately); every
+    # seed is clamped into the capacity rows so chains start feasible.
     starts = [heur.A]
     for _ in range(chains - 1):
         A = np.zeros((mu, tau))
         A[rng.integers(0, mu, size=tau), np.arange(tau)] = 1.0
-        starts.append(A)
+        starts.append(clamp_to_capacity(A, problem))
     A_starts = np.stack(starts)
     A_starts[0] = heur.A  # keep the heuristic verbatim in chain 0
     if A_inc is not None and chains > 1:
         A_starts[1] = A_inc  # warm start: one chain anneals the incumbent
 
     best_A, best_m = heur.A, heur.makespan
-    if A_inc is not None:
+    if A_inc is not None and capacity_ok(A_inc, problem):
         m_inc = makespan(A_inc, problem)
         if m_inc < best_m:
             best_A, best_m = A_inc, m_inc
@@ -250,7 +319,7 @@ def ml_allocation(
             if (time.perf_counter() - t_start) >= time_limit:
                 break
             A2, m2 = _iterated_polish(problem, cand_A[idx])
-            if m2 < best_m:
+            if A2 is not None and m2 < best_m:
                 best_A, best_m = A2, m2
         # re-seed the next round from the winners (exploitation)
         A_starts = cand_A[order][np.arange(chains) % max(len(order), 1)]

@@ -10,6 +10,12 @@ The heuristic is optimal when the gamma constants vanish and the work matrix
 is rank-1 (platform speed independent of task); when constants dominate it
 degrades badly because it charges *every* platform *every* task's constant —
 exactly the regime where the ML/MILP solvers win (paper §6.3).
+
+With a resource dimension the proportional shares are followed by a
+*water-filling clamp* (:func:`clamp_to_capacity`): overloaded platforms
+shed task shares onto the platforms with the most remaining capacity until
+every row fits, so the heuristic stays a feasible upper bound the other
+solvers are measured against.
 """
 from __future__ import annotations
 
@@ -18,9 +24,73 @@ import time
 
 import numpy as np
 
-from .allocation import Allocation, AllocationProblem, makespan, platform_latencies
+from .allocation import (
+    CAPACITY_RTOL,
+    Allocation,
+    AllocationProblem,
+    SUPPORT_ATOL,
+    assert_capacity_feasible,
+    capacity_ok,
+    makespan,
+    platform_latencies,
+)
 
-__all__ = ["proportional_allocation", "incumbent_shortcut"]
+__all__ = ["proportional_allocation", "incumbent_shortcut", "clamp_to_capacity"]
+
+
+def clamp_to_capacity(A: np.ndarray, problem: AllocationProblem,
+                      max_sweeps: int = 64) -> np.ndarray:
+    """Water-fill an allocation into the capacity rows.
+
+    Greedy repair: the most-overloaded platform pours its largest resource
+    contributions into the platforms with the most slack (cheapest work
+    first among equals) until every row fits. The instance must have
+    passed :func:`assert_capacity_feasible`; if the greedy pass stalls
+    (pathological resource geometry), the caller is expected to fall back
+    to an exact LP (see :func:`repro.core.annealing.lp_polish`, which
+    carries the capacity rows).
+
+    Returns a new matrix; the input is not modified.
+    """
+    if problem.capacity is None:
+        return np.asarray(A, dtype=np.float64)
+    A = np.asarray(A, dtype=np.float64).copy()
+    R, cap, W = problem.resource, problem.capacity, problem.work
+    slack_tol = np.where(np.isfinite(cap), cap * CAPACITY_RTOL, np.inf) + 1e-30
+    for _ in range(max_sweeps):
+        usage = (R * A).sum(axis=1)
+        over = usage - cap
+        i = int(np.argmax(over))
+        if over[i] <= slack_tol[i]:
+            return A
+        progressed = False
+        # shed this row's biggest contributions first
+        for j in np.argsort(-(R[i] * A[i])):
+            if over[i] <= 0 or R[i, j] <= 0 or A[i, j] <= SUPPORT_ATOL:
+                continue
+            need = min(A[i, j], over[i] / R[i, j])  # share to move off i
+            # receivers: slack per share of task j, cheapest work first
+            order = sorted((k for k in range(problem.mu)
+                            if k != i and cap[k] - usage[k] > slack_tol[k]),
+                           key=lambda k: (W[k, j], R[k, j]))
+            for k in order:
+                if need <= 0:
+                    break
+                room = (np.inf if R[k, j] <= 0
+                        else (cap[k] - usage[k]) / R[k, j])
+                dm = min(need, room)
+                if dm <= 0:
+                    continue
+                A[i, j] -= dm
+                A[k, j] += dm
+                usage[i] -= dm * R[i, j]
+                usage[k] += dm * R[k, j]
+                over[i] = usage[i] - cap[i]
+                need -= dm
+                progressed = True
+        if not progressed:
+            break
+    return A
 
 
 def incumbent_shortcut(
@@ -29,7 +99,7 @@ def incumbent_shortcut(
     solver: str,
     warm_tol: float,
     t0: float,
-) -> tuple[np.ndarray, Allocation | None]:
+) -> tuple[np.ndarray, Allocation | None, dict]:
     """Warm-start early exit shared by the optimising solvers.
 
     Online re-solves usually start from an incumbent allocation (the one
@@ -41,6 +111,12 @@ def incumbent_shortcut(
     with ``meta["warm_start"] == "skipped"``. Otherwise the caller proceeds
     (``meta["warm_start"] == "solved"``) with the incumbent matrix available
     as a start point.
+
+    An incumbent that violates the problem's *capacity* rows (the re-solve
+    carries remaining capacities the executing plan was never solved
+    against) is never waved through, however good its makespan looks: the
+    returned meta says ``warm_start == "rejected"`` so callers both solve
+    for real and repair the matrix before seeding anything with it.
 
     With per-platform offsets (mid-run re-solves) the incumbent must clear
     the bar in *both* frames to be waved through:
@@ -57,8 +133,10 @@ def incumbent_shortcut(
     With zero offsets both collapse to the plain
     ``m_inc <= heuristic * (1 + warm_tol)``.
 
-    Returns ``(A_incumbent, shortcut)`` where ``shortcut`` is the ready
-    Allocation when the solve should be skipped, else None.
+    Returns ``(A_incumbent, shortcut, warm_meta)`` where ``shortcut`` is
+    the ready Allocation when the solve should be skipped (else None) and
+    ``warm_meta`` is the ``warm_start`` metadata the caller folds into its
+    own result when it does solve.
     """
     A_inc = np.asarray(incumbent.A if hasattr(incumbent, "A") else incumbent,
                        dtype=np.float64)
@@ -66,6 +144,11 @@ def incumbent_shortcut(
         raise ValueError(
             f"incumbent shape {A_inc.shape} does not match problem "
             f"({problem.mu}, {problem.tau}); restrict it first")
+    if not capacity_ok(A_inc, problem):
+        # the executing plan no longer fits the (remaining) capacities —
+        # it must not short-circuit the solve, and callers must repair it
+        # before using it as a seed
+        return A_inc, None, {"warm_start": "rejected"}
     flat = (dataclasses.replace(problem, offsets=None)
             if problem.offsets.any() else problem)
     heur_flat = proportional_allocation(flat)
@@ -80,12 +163,13 @@ def incumbent_shortcut(
             solve_time=time.perf_counter() - t0, optimal=False,
             meta={"warm_start": "skipped", "warm_tol": warm_tol,
                   "heuristic_bound": heur_flat.makespan},
-        )
-    return A_inc, None
+        ), {"warm_start": "skipped"}
+    return A_inc, None, {"warm_start": "solved"}
 
 
 def proportional_allocation(problem: AllocationProblem) -> Allocation:
     t0 = time.perf_counter()
+    assert_capacity_feasible(problem)
     ones = np.ones((problem.mu, problem.tau))
     L = platform_latencies(ones, problem)  # L = H_L(1, c)
     free = L <= 0.0
@@ -98,9 +182,26 @@ def proportional_allocation(problem: AllocationProblem) -> Allocation:
         inv = 1.0 / L
         shares = inv / inv.sum()  # shares[i] = (L_i * sum_o 1/L_o)^-1
     A = np.repeat(shares[:, None], problem.tau, axis=1)
+    meta = {}
+    if not capacity_ok(A, problem):
+        A = clamp_to_capacity(A, problem)
+        meta["capacity"] = "clamped"
+        if not capacity_ok(A, problem):
+            # greedy repair stalled: fall back to the exact LP over the
+            # full support (it carries the capacity rows); feasibility is
+            # guaranteed by the pre-check above
+            from .annealing import lp_polish
+
+            out = lp_polish(problem, np.ones_like(A, dtype=bool))
+            if out is None:  # numerically degenerate edge — report honestly
+                raise AssertionError(
+                    "capacity clamp failed on a feasible instance")
+            A, _ = out
+            meta["capacity"] = "lp"
     return Allocation(
         A=A,
         makespan=makespan(A, problem),
         solver="heuristic",
         solve_time=time.perf_counter() - t0,
+        meta=meta,
     )

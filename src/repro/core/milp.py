@@ -6,7 +6,11 @@ binaries B >= A, giving the mixed-integer linear program
     minimise_{G_L, A, B}  G_L
     s.t.   sum_i A[i,j] == 1                          (every task placed)
            (W ∘ A)·1 + (gamma ∘ B)·1 <= G_L           (per-platform latency)
+           (R ∘ A)·1 <= capacity                      (per-platform resource)
            A[i,j] <= B[i,j],  A real in [0,1], B binary
+
+(the resource rows appear only when the problem carries the optional
+capacity dimension — e.g. KV-cache bytes vs HBM for LM serving.)
 
 The paper fed this (via ZIMPL) to SCIP; we use HiGHS branch-and-bound via
 ``scipy.optimize.milp`` — the same problem class with a 2020s solver, which
@@ -26,7 +30,14 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import LinearConstraint, Bounds, milp
 
-from .allocation import SUPPORT_ATOL, Allocation, AllocationProblem, makespan
+from .allocation import (
+    SUPPORT_ATOL,
+    Allocation,
+    AllocationProblem,
+    assert_capacity_feasible,
+    makespan,
+    platform_usage,
+)
 from .heuristic import incumbent_shortcut, proportional_allocation
 
 __all__ = ["milp_allocation"]
@@ -74,12 +85,19 @@ def _build_relaxed(problem: AllocationProblem):
     )
     link_con = LinearConstraint(link, lb=-np.inf, ub=np.zeros(n))
 
+    cons = [eq_con, lat_con, link_con]
+    if problem.has_capacity:
+        # per-platform resource rows: R_i·A_i <= capacity_i   (mu rows)
+        res = sp.csr_matrix(
+            (problem.resource.ravel(), (rows, a_cols)), shape=(mu, 2 * n + 1))
+        cons.append(LinearConstraint(res, lb=-np.inf, ub=problem.capacity))
+
     integrality = np.concatenate([np.zeros(n), np.ones(n), np.zeros(1)])
     bounds = Bounds(
         lb=np.concatenate([np.zeros(2 * n), [0.0]]),
         ub=np.concatenate([np.ones(2 * n), [np.inf]]),
     )
-    return c, [eq_con, lat_con, link_con], integrality, bounds
+    return c, cons, integrality, bounds
 
 
 def _build_atomic(problem: AllocationProblem):
@@ -103,12 +121,17 @@ def _build_atomic(problem: AllocationProblem):
         shape=(mu, n + 1),
     )
     lat_con = LinearConstraint(lat, lb=-np.inf, ub=-problem.offsets)
+    cons = [eq_con, lat_con]
+    if problem.has_capacity:
+        res = sp.csr_matrix(
+            (problem.resource.ravel(), (rows, jj)), shape=(mu, n + 1))
+        cons.append(LinearConstraint(res, lb=-np.inf, ub=problem.capacity))
     integrality = np.concatenate([np.ones(n), np.zeros(1)])
     bounds = Bounds(
         lb=np.zeros(n + 1),
         ub=np.concatenate([np.ones(n), [np.inf]]),
     )
-    return c, [eq_con, lat_con], integrality, bounds
+    return c, cons, integrality, bounds
 
 
 def milp_allocation(
@@ -128,12 +151,13 @@ def milp_allocation(
     on the re-fitted problem, return it without solving.
     """
     t0 = time.perf_counter()
+    assert_capacity_feasible(problem)
     warm_meta = {}
     if incumbent is not None:
-        _, shortcut = incumbent_shortcut(problem, incumbent, "milp", warm_tol, t0)
+        _, shortcut, warm_meta = incumbent_shortcut(
+            problem, incumbent, "milp", warm_tol, t0)
         if shortcut is not None:
             return shortcut
-        warm_meta = {"warm_start": "solved"}
     mu, tau = problem.mu, problem.tau
     n = mu * tau
     if atomic:
@@ -165,7 +189,14 @@ def milp_allocation(
     colsum = A.sum(axis=0)
     if (colsum <= 0).any():  # numerically degenerate column: put on best platform
         for j in np.nonzero(colsum <= 0)[0]:
-            A[np.argmin(problem.full_latency[:, j]), j] = 1.0
+            order = np.argsort(problem.full_latency[:, j])
+            if problem.capacity is not None:
+                # prefer the fastest platform whose capacity row still fits
+                usage = platform_usage(A, problem)
+                fits = [i for i in order
+                        if usage[i] + problem.resource[i, j] <= problem.capacity[i]]
+                order = fits or list(order)
+            A[order[0], j] = 1.0
         colsum = A.sum(axis=0)
     A /= colsum
 

@@ -23,19 +23,34 @@ real JAX engine (:class:`repro.launch.serve.ServeEngine`) with wall-clock
 latency; ``SimulatedLMPlatform`` replays a fleet spec from its two
 characteristics (application GFLOPS, network RTT) using the model's
 analytic FLOPs-per-token.
+
+Both platforms serve with **continuous batching**: the requests of a
+dispatch share one running decode batch — joining when their KV pages fit
+the platform's memory budget, leaving the step their generation target is
+reached — rather than each paying a solo decode pass. Each request's
+record carries its *attributed* share of the shared steps, so per-platform
+record sums remain the platform's busy time and eq. 7 fits stay linear in
+the token count. The KV pages a request pins while resident
+(:func:`kv_bytes_per_token` x tokens, from the model shapes in
+:mod:`repro.configs`) are also what the domain reports to the allocator as
+the resource/capacity dimension: ``resource[p, t] = kv_bytes_per_token``
+per decoded token vs ``capacity[p] = spec.mem_bytes`` (HBM), so the
+solvers see memory, not just eq. 7 latency.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import threading
 import time
 import zlib
+from collections import deque
 from typing import Sequence
 
 import numpy as np
 
-from repro.core.allocation import linear_work_reduction
+from repro.core.allocation import CapacityError, linear_work_reduction
 from repro.core.metrics import CombinedModel, LatencyModel, fit_latency_model
 from repro.runtime.domain import Domain, PlatformSpec, seed_for
 from repro.runtime.scenario import Scenario, apply_scenario, salvage_runs
@@ -45,6 +60,7 @@ __all__ = [
     "LocalLMPlatform", "SimulatedLMPlatform",
     "LM_FLEET_SPECS", "build_lm_fleet", "smoke_requests",
     "LMServingDomain", "flops_per_token",
+    "kv_bytes_per_token", "request_kv_bytes",
 ]
 
 
@@ -128,18 +144,58 @@ def flops_per_token(cfg, batch: int = 1) -> float:
 
 
 # --------------------------------------------------------------------------
+# KV-cache memory model (the capacity dimension)
+# --------------------------------------------------------------------------
+
+def kv_bytes_per_token(cfg, batch: int = 1) -> float:
+    """Bytes of KV cache one decoded token pins, per request.
+
+    From the model shapes: 2 (K and V) x attention layers x n_kv_heads x
+    head_dim x cache dtype x the request's internal batch. Recurrent
+    families hold constant-size state (no per-token growth); hybrids pay
+    only their attention layers.
+    """
+    if not cfg.has_decoder or cfg.family == "rwkv":
+        return 0.0
+    layers = cfg.n_layers
+    if cfg.family == "hybrid" and cfg.hybrid_pattern:
+        pat = cfg.hybrid_pattern
+        layers = sum(1 for i in range(cfg.n_layers) if pat[i % len(pat)] != "rec")
+    itemsize = np.dtype(cfg.param_dtype).itemsize
+    return float(2 * layers * cfg.n_kv_heads * cfg.hd * itemsize * batch)
+
+
+@functools.lru_cache(maxsize=1024)
+def _kv_per_token(arch: str, smoke: bool, batch: int) -> float:
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    return kv_bytes_per_token(cfg.smoke() if smoke else cfg, batch)
+
+
+def request_kv_bytes(req: "LMRequest", n_tokens: int | None = None) -> float:
+    """KV pages the request holds while resident in a decode batch:
+    prompt pages plus one page per decoded token (``max_new_tokens``
+    when ``n_tokens`` is not given — the reservation the engine makes)."""
+    n = req.max_new_tokens if n_tokens is None else int(n_tokens)
+    return _kv_per_token(req.arch, req.smoke, req.batch) * (req.prompt_len + n)
+
+
+# --------------------------------------------------------------------------
 # Platforms
 # --------------------------------------------------------------------------
 
 #: A small heterogeneous serving fleet, same schema as the paper's Table 2:
-#: application performance (GFLOPS, smoke-model scale) + network RTT. The
-#: spread is chosen so the constant term matters — the regime where the
-#: MILP/annealing solvers beat the proportional heuristic (§6.3).
+#: application performance (GFLOPS, smoke-model scale) + network RTT +
+#: device memory (KV-cache budget, smoke-model scale so workloads of a few
+#: hundred KB of pages genuinely contend). The spread is chosen so the
+#: constant term matters — the regime where the MILP/annealing solvers
+#: beat the proportional heuristic (§6.3).
 LM_FLEET_SPECS: list[PlatformSpec] = [
-    PlatformSpec("Edge Accelerator", "CPU", "embedded NPU", "on-prem",     2.0,   0.200),
-    PlatformSpec("Rack GPU",         "GPU", "rack server",  "on-prem",    50.0,   4.000),
-    PlatformSpec("Cloud GPU",        "GPU", "cloud vm",     "us-east",   200.0,  60.000),
-    PlatformSpec("Cloud Pod",        "GPU", "accelerator pod", "us-west", 800.0, 120.000),
+    PlatformSpec("Edge Accelerator", "CPU", "embedded NPU", "on-prem",     2.0,   0.200, mem_bytes=128 * 1024),
+    PlatformSpec("Rack GPU",         "GPU", "rack server",  "on-prem",    50.0,   4.000, mem_bytes=512 * 1024),
+    PlatformSpec("Cloud GPU",        "GPU", "cloud vm",     "us-east",   200.0,  60.000, mem_bytes=2 * 1024 ** 2),
+    PlatformSpec("Cloud Pod",        "GPU", "accelerator pod", "us-west", 800.0, 120.000, mem_bytes=8 * 1024 ** 2),
 ]
 
 
@@ -152,12 +208,23 @@ class _LMPlatformBase:
         # the KV cache is sized for max_new_tokens; never generate past it
         return min(max(int(n_tokens), 1), req.max_new_tokens)
 
+    def _admission_guard(self, reqs: Sequence[LMRequest],
+                         tokens: Sequence[int]) -> None:
+        cap = self.spec.mem_bytes
+        for req, n in zip(reqs, tokens):
+            if request_kv_bytes(req, n) > cap:
+                raise CapacityError(
+                    f"request {req.task_id}: {request_kv_bytes(req, n):.0f} "
+                    f"KV bytes exceed {self.spec.name}'s {cap:.0f}-byte budget "
+                    "on its own — no batch schedule can serve it")
+
     def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
         raise NotImplementedError
 
     def run_batch(self, reqs: Sequence[LMRequest], n_tokens,
                   seed: int = 0) -> list[ServeRecord]:
-        # an outage striking mid-batch re-raises with the completed records
+        # fallback for third-party platforms: solo serves back-to-back. An
+        # outage striking mid-batch re-raises with the completed records
         # attached (see scenario.salvage_runs) so dispatchers keep them
         return salvage_runs(lambda rn: self.run(rn[0], rn[1], seed=seed),
                             list(zip(reqs, _as_token_list(reqs, n_tokens))))
@@ -200,14 +267,69 @@ class LocalLMPlatform(_LMPlatformBase):
         return ServeRecord(self.spec.name, req.task_id, n,
                            result.total_latency, result.prefill_latency)
 
+    def run_batch(self, reqs: Sequence[LMRequest], n_tokens,
+                  seed: int = 0) -> list[ServeRecord]:
+        """Continuous batching on the real engine.
+
+        Same-family requests (one dispatch group shares a launch key by
+        construction) ride one running decode loop
+        (:meth:`repro.launch.serve.ServeEngine.generate_many`) in KV-gated
+        admission waves: a wave joins when its pages fit ``mem_bytes``,
+        each request leaves the step its target is reached. Mixed-family
+        calls fall back to solo serves."""
+        tokens = [self._clamp(r, n) for r, n in
+                  zip(reqs, _as_token_list(reqs, n_tokens))]
+        if len({(r.arch, r.smoke, r.batch, r.prompt_len, r.max_seq)
+                for r in reqs}) > 1:
+            return super().run_batch(reqs, tokens, seed=seed)
+        self._admission_guard(reqs, tokens)
+        engine = self._engine(reqs[0])
+        out: list[ServeRecord] = []
+        wave: list[int] = []
+        held = 0.0
+        cap = self.spec.mem_bytes
+
+        def flush():
+            if not wave:
+                return
+            results = engine.generate_many([tokens[i] for i in wave], seed=seed)
+            for i, res in zip(wave, results):
+                out.append(ServeRecord(self.spec.name, reqs[i].task_id,
+                                       tokens[i], res.total_latency,
+                                       res.prefill_latency))
+
+        for i, (req, n) in enumerate(zip(reqs, tokens)):
+            need = request_kv_bytes(req, n)
+            if wave and held + need > cap:
+                flush()
+                wave, held = [], 0.0
+            wave.append(i)
+            held += need
+        flush()
+        return out
+
 
 class SimulatedLMPlatform(_LMPlatformBase):
-    """Replays a fleet spec row from (GFLOPS, RTT) — the two published
-    characteristics that determine beta and gamma (§5.1.2):
+    """Replays a fleet spec row from (GFLOPS, RTT, HBM) — the published
+    characteristics that determine beta, gamma and the KV budget (§5.1.2):
 
         latency(tokens) = (prefill + tokens) * flops_tok / GFLOPS
                           + RTT + lognormal jitter
+
+    A dispatch's requests share a continuous decode batch: they join in
+    submission order as their KV pages (prompt + decoded tokens) fit
+    ``spec.mem_bytes``, decode in lockstep, and leave at their token
+    target, freeing pages for the queue. A shared step over ``k`` residents
+    costs ``(1 + batch_alpha * (k - 1))`` solo steps (decode is
+    memory-bound, so batching is sub-linear) attributed equally — each
+    record carries its request's share, so per-platform record sums stay
+    the platform's busy time and a solo serve reproduces the formula above
+    exactly.
     """
+
+    #: marginal cost of one extra resident per decode step, as a fraction
+    #: of a solo step; 0 = perfectly memory-bound, 1 = no batching win.
+    batch_alpha: float = 0.6
 
     def __init__(self, spec: PlatformSpec, jitter: float = 0.02, seed: int = 0,
                  realtime: float = 0.0, scenario: Scenario | None = None):
@@ -228,25 +350,67 @@ class SimulatedLMPlatform(_LMPlatformBase):
         self.scenario = scenario
         self.clock = 0.0
 
+    def _continuous_plan(self, reqs: Sequence[LMRequest],
+                         tokens: Sequence[int]) -> tuple[list[float], list[float]]:
+        """Clean (jitter-free) per-request (prefill, attributed decode)
+        seconds under KV-gated lockstep continuous batching."""
+        cap = self.spec.mem_bytes
+        gps = self.spec.gflops * 1e9
+        d = [flops_per_token(r.config(), r.batch) / gps for r in reqs]
+        prefill = [r.prompt_len * di for r, di in zip(reqs, d)]
+        need = [request_kv_bytes(r, n) for r, n in zip(reqs, tokens)]
+        decode = [0.0] * len(reqs)
+        remaining = [int(n) for n in tokens]
+        queue = deque(range(len(reqs)))
+        active: list[int] = []
+        held = 0.0
+        while queue or active:
+            while queue and held + need[queue[0]] <= cap:
+                i = queue.popleft()
+                active.append(i)
+                held += need[i]
+            k = len(active)
+            share = (1.0 + self.batch_alpha * (k - 1)) / k
+            step = min(remaining[i] for i in active)
+            for i in active:
+                decode[i] += d[i] * share * step
+                remaining[i] -= step
+            for i in [i for i in active if remaining[i] <= 0]:
+                active.remove(i)
+                held -= need[i]
+        return prefill, decode
+
     def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
-        n = self._clamp(req, n_tokens)
-        # stable across processes (unlike hash(): PYTHONHASHSEED randomises
-        # str hashing), so seeded runs reproduce exactly
-        key = zlib.crc32(f"{self.spec.name}/{req.task_id}/{n}/{seed}".encode())
-        rng = np.random.default_rng(key + self._seed)
-        ftok = flops_per_token(req.config(), req.batch)
-        prefill = req.prompt_len * ftok / (self.spec.gflops * 1e9)
-        decode = n * ftok / (self.spec.gflops * 1e9)
-        jitter = rng.lognormal(0.0, self.jitter)
-        latency = (prefill + decode + self.spec.rtt_ms * 1e-3) * jitter
-        if self.scenario is not None:
-            stretched = apply_scenario(self, latency)
-            prefill *= stretched / max(latency, 1e-300)
-            latency = stretched
-        if self.realtime:
-            time.sleep(latency * self.realtime)
-        return ServeRecord(self.spec.name, req.task_id, n, latency,
-                           prefill_latency=prefill * jitter)
+        return self.run_batch([req], n_tokens, seed=seed)[0]
+
+    def run_batch(self, reqs: Sequence[LMRequest], n_tokens,
+                  seed: int = 0) -> list[ServeRecord]:
+        tokens = [self._clamp(r, n) for r, n in
+                  zip(reqs, _as_token_list(reqs, n_tokens))]
+        self._admission_guard(reqs, tokens)
+        prefill, decode = self._continuous_plan(reqs, tokens)
+
+        def finish(item) -> ServeRecord:
+            req, n, pre_s, dec_s = item
+            # stable across processes (unlike hash(): PYTHONHASHSEED
+            # randomises str hashing), so seeded runs reproduce exactly
+            key = zlib.crc32(f"{self.spec.name}/{req.task_id}/{n}/{seed}".encode())
+            rng = np.random.default_rng(key + self._seed)
+            jitter = rng.lognormal(0.0, self.jitter)
+            pre = pre_s * jitter
+            latency = (pre_s + dec_s + self.spec.rtt_ms * 1e-3) * jitter
+            if self.scenario is not None:
+                stretched = apply_scenario(self, latency)
+                pre *= stretched / max(latency, 1e-300)
+                latency = stretched
+            if self.realtime:
+                time.sleep(latency * self.realtime)
+            return ServeRecord(self.spec.name, req.task_id, n, latency,
+                               prefill_latency=pre)
+
+        # an outage striking mid-batch re-raises with the completed records
+        # attached (see scenario.salvage_runs) so dispatchers keep them
+        return salvage_runs(finish, list(zip(reqs, tokens, prefill, decode)))
 
 
 def _as_token_list(reqs: Sequence[LMRequest], n_tokens) -> list[int]:
@@ -295,6 +459,19 @@ class LMServingDomain(Domain):
 
     def default_quality(self) -> np.ndarray:
         return np.asarray([r.gen_tokens for r in self.tasks], dtype=np.float64)
+
+    # -- capacity: KV-cache memory vs HBM ----------------------------------
+
+    def resource_per_unit(self, platform, req: LMRequest) -> float:
+        """Each decoded token pins one KV page on the serving platform for
+        the request's residency (continuous batching holds the cache until
+        the request leaves). Prompt pages are the per-dispatch analogue of
+        gamma — constant, not per-unit — so the linear dimension the
+        solvers see is tokens x bytes/token."""
+        return _kv_per_token(req.arch, req.smoke, req.batch)
+
+    def platform_capacity(self, platform) -> float:
+        return float(getattr(platform.spec, "mem_bytes", math.inf))
 
     # -- characterisation ---------------------------------------------------
 

@@ -111,6 +111,58 @@ class ServeEngine:
             tokens=np.concatenate(generated, axis=1),
         )
 
+    def generate_many(self, gens: list[int], seed: int = 0) -> list[GenerationResult]:
+        """Continuous batching: ``len(gens)`` streams share one running
+        decode loop and leave it individually.
+
+        All streams join at one joint prefill (its wall clock split
+        evenly); the loop then decodes until the *longest* stream's target,
+        and each measured step is attributed in equal shares to the streams
+        still active at that step — a stream "leaves the batch" the moment
+        its own target is reached, so late steps get cheaper per resident
+        exactly as on a continuous-batching server. Per-stream sums
+        therefore add up to the engine's true busy time, which is what the
+        allocator's records must reflect.
+        """
+        import jax.numpy as jnp
+        import numpy as np
+
+        gens = [int(g) for g in gens]
+        if not gens:
+            return []
+        if min(gens) < 1:
+            raise ValueError(f"every stream must decode >= 1 token: {gens}")
+        if self.prompt_len + max(gens) > self.max_seq:
+            raise ValueError(
+                f"prompt {self.prompt_len} + gen {max(gens)} exceeds "
+                f"max_seq {self.max_seq}")
+        self.warm(seed)
+        batch = self._batch_inputs(seed)
+
+        t0 = time.perf_counter()
+        cache, logits = self._prefill(self.params, batch)
+        logits.block_until_ready()
+        t_prefill = (time.perf_counter() - t0) / len(gens)
+
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        generated = [np.asarray(toks)]
+        per_stream: list[list[float]] = [[] for _ in gens]
+        for step in range(max(gens)):
+            t0 = time.perf_counter()
+            cache, logits = self._decode(self.params, cache, toks)
+            toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            toks.block_until_ready()
+            step_lat = time.perf_counter() - t0
+            generated.append(np.asarray(toks))
+            active = [i for i, g in enumerate(gens) if g > step]
+            for i in active:
+                per_stream[i].append(step_lat / len(active))
+        tokens = np.concatenate(generated, axis=1)
+        return [GenerationResult(prefill_latency=t_prefill,
+                                 decode_latencies=per_stream[i],
+                                 tokens=tokens[:, :g + 1])
+                for i, g in enumerate(gens)]
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -121,6 +173,10 @@ def main(argv=None) -> int:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--queue", default="",
+                    help="comma-separated per-stream token targets served "
+                         "with continuous batching (e.g. 4,16,8); streams "
+                         "share one decode loop and leave at their target")
     args = ap.parse_args(argv)
 
     import numpy as np
@@ -134,9 +190,23 @@ def main(argv=None) -> int:
         print(f"{args.arch} has no decoder; nothing to serve")
         return 0
 
+    gens = [int(g) for g in args.queue.split(",") if g] if args.queue else []
     engine = ServeEngine(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                         max_seq=args.max_seq or (args.prompt_len + args.gen + 8),
+                         max_seq=args.max_seq or
+                         (args.prompt_len + max([args.gen, *gens]) + 8),
                          seed=args.seed)
+    if gens:
+        results = engine.generate_many(gens, seed=args.seed)
+        busy = sum(r.total_latency for r in results)
+        for i, (g, r) in enumerate(zip(gens, results)):
+            print(f"stream {i}: {g} tokens in {r.total_latency*1e3:.1f} ms "
+                  f"(attributed share of the running batch)")
+        # solo baseline: every stream paying its own prefill + decode pass
+        step = busy / max(sum(gens), 1)
+        solo = sum(results[0].prefill_latency * len(gens) + step * g for g in gens)
+        print(f"continuous batch: {sum(gens)} tokens, engine busy "
+              f"{busy*1e3:.1f} ms (solo serves ~{solo*1e3:.1f} ms)")
+        return 0
     result = engine.generate(args.gen, seed=args.seed)
 
     n = np.arange(1, len(result.decode_latencies) + 1)

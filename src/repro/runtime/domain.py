@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import math
 import zlib
 from typing import Any, Hashable, Protocol, Sequence
 
@@ -65,6 +66,9 @@ class PlatformSpec:
     ``gflops``/``rtt_ms`` are the two published characteristics the paper
     says determine beta and gamma respectively (§5.1.2); simulated
     platforms of any domain replay their latency model from them.
+    ``mem_bytes`` is the device-memory budget backing the optional
+    resource-capacity dimension (KV-cache bytes for LM serving); the
+    default inf keeps platforms of capacity-free domains unconstrained.
     """
 
     name: str
@@ -73,6 +77,7 @@ class PlatformSpec:
     location: str
     gflops: float        # application performance
     rtt_ms: float        # network round-trip time
+    mem_bytes: float = math.inf
 
 
 class RunRecordLike(Protocol):
@@ -214,6 +219,21 @@ class Domain(abc.ABC):
         constants do not swamp high-RTT platforms under round-based
         dispatch."""
         return float(model.latency.beta), float(model.latency.gamma)
+
+    # -- capacity (optional second constraint dimension) -------------------
+
+    def resource_per_unit(self, platform, task) -> float:
+        """Resource units one unit of this task's work holds on the
+        platform while the task is being served (e.g. KV-cache bytes per
+        decoded token for LM serving). The scheduler multiplies this by
+        the task's total work units to build ``AllocationProblem.resource``;
+        the default 0 keeps the capacity dimension inert."""
+        return 0.0
+
+    def platform_capacity(self, platform) -> float:
+        """The platform's resource budget (e.g. HBM bytes); paired with
+        :meth:`resource_per_unit`. inf means unconstrained."""
+        return math.inf
 
     def record_units(self, record: RunRecordLike) -> int:
         """Work units one execution record accounts for (remaining-work

@@ -248,7 +248,8 @@ class OnlineScheduler:
     def _solve(self, quality, method: str, solver_kw: dict,
                alive: dict[str, bool], done: dict[int, float],
                incumbent_A: np.ndarray | None,
-               elapsed: dict[str, float] | None = None):
+               elapsed: dict[str, float] | None = None,
+               done_pair: dict[tuple[str, int], float] | None = None):
         """(Re-)solve the allocation over the remaining work only.
 
         Returns (allocation, A_full, quotas) — A_full is the sub-solution
@@ -260,6 +261,13 @@ class OnlineScheduler:
         :meth:`Scheduler.shards` uses. Rounds then drain quotas, so an
         unperturbed online run dispatches the same totals per pair as a
         single execute pass (± one unit of per-tranche rounding).
+
+        When the problem carries a capacity dimension, ``done_pair`` (work
+        units already served per (platform, task)) converts into resource
+        already *held*: shards of still-active tasks keep their pages until
+        the task completes, so each platform enters the restricted problem
+        with only its remaining capacity — a drift-triggered re-solve
+        cannot oversubscribe a platform that is part-way through its plan.
         """
         domain, sched = self.domain, self.scheduler
         c = sched.quality_vector(quality)
@@ -293,9 +301,23 @@ class OnlineScheduler:
         offsets = np.array([
             (elapsed or {}).get(domain.platform_name(p), 0.0)
             for p in domain.platforms])
+        # remaining capacity: pages held by already-served shards of tasks
+        # still in flight stay committed on their platform until the task
+        # completes; completed tasks have freed theirs (absent from cols)
+        cap_rem = None
+        if problem.capacity is not None:
+            active = {domain.tasks[j].task_id for j in cols}
+            held = np.zeros(problem.mu)
+            for i, p in enumerate(domain.platforms):
+                pname = domain.platform_name(p)
+                for t in domain.tasks:
+                    if t.task_id in active:
+                        held[i] += (domain.resource_per_unit(p, t)
+                                    * (done_pair or {}).get((pname, t.task_id), 0.0))
+            cap_rem = np.maximum(problem.capacity - held, 0.0)
         sub = restrict_problem(problem, rows, cols,
                                [frac_by_col[j] for j in cols],
-                               offsets=offsets)
+                               offsets=offsets, capacity=cap_rem)
         kw = dict(solver_kw)
         if incumbent_A is not None and method in ("milp", "ml"):
             kw["incumbent"] = restrict_allocation(incumbent_A, rows, cols)
@@ -450,6 +472,7 @@ class OnlineScheduler:
         alive = {domain.platform_name(p): True for p in domain.platforms}
         fail_count: dict[str, int] = {pn: 0 for pn in alive}
         done: dict[int, float] = {}
+        done_pair: dict[tuple[str, int], float] = {}
         windows: dict[tuple[str, int], deque] = {
             key: deque(recs, maxlen=cfg.refit_window)
             for key, recs in sched.characterise_records.items()}
@@ -458,7 +481,8 @@ class OnlineScheduler:
 
         solve_t0 = time.perf_counter()
         alloc, A_full, quotas = self._solve(
-            quality, method, solver_kw, alive, done, incumbent_A=None)
+            quality, method, solver_kw, alive, done, incumbent_A=None,
+            done_pair=done_pair)
         solve_wall = time.perf_counter() - solve_t0
         resolve_wall = 0.0
         if alloc is None:
@@ -501,6 +525,7 @@ class OnlineScheduler:
                     dispatched[pname] = dispatched.get(pname, 0) + units
                     done[rec.task_id] = done.get(rec.task_id, 0.0) + units
                     key = (pname, rec.task_id)
+                    done_pair[key] = done_pair.get(key, 0.0) + units
                     quotas[key] = max(quotas.get(key, 0.0) - units, 0.0)
                     windows.setdefault(
                         key, deque(maxlen=cfg.refit_window)).append(rec)
@@ -569,7 +594,8 @@ class OnlineScheduler:
                 solve_t0 = time.perf_counter()
                 alloc2, A2, quotas2 = self._solve(
                     quality, method, solver_kw, alive, done,
-                    incumbent_A=A_full, elapsed=plat_lat)
+                    incumbent_A=A_full, elapsed=plat_lat,
+                    done_pair=done_pair)
                 dt = time.perf_counter() - solve_t0
                 resolve_wall += dt
                 solve_wall += dt

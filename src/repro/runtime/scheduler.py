@@ -205,12 +205,42 @@ class Scheduler:
         return np.broadcast_to(np.asarray(quality, dtype=np.float64),
                                (len(self.tasks),)).copy()
 
+    def capacity_matrices(self, quality=None) -> tuple[np.ndarray, np.ndarray] | None:
+        """(resource, capacity) for the domain's second constraint
+        dimension, or None when the domain declares none.
+
+        ``resource[i, j]`` is what platform i holds while serving *all* of
+        task j at the requested quality: the domain's per-work-unit
+        resource times its quality->work inversion under platform i's own
+        fitted model (KV bytes/token x tokens, bytes/path x paths, ...).
+        """
+        assert self.models is not None, "characterise() first"
+        c = self.quality_vector(quality)
+        mu, tau = len(self.platforms), len(self.tasks)
+        resource = np.zeros((mu, tau))
+        capacity = np.zeros(mu)
+        for i, p in enumerate(self.platforms):
+            pname = self.domain.platform_name(p)
+            capacity[i] = self.domain.platform_capacity(p)
+            for j, t in enumerate(self.tasks):
+                per_unit = self.domain.resource_per_unit(p, t)
+                if per_unit:
+                    model = self.models[(pname, t.task_id)]
+                    resource[i, j] = per_unit * self.domain.work_units(
+                        model, float(c[j]))
+        if not resource.any() or not np.isfinite(capacity).any():
+            return None  # dimension inert: keep the problem capacity-free
+        return resource, capacity
+
     def problem(self, quality=None) -> AllocationProblem:
         if self._delta is None:
             raise RuntimeError("characterise() first")
+        cap = self.capacity_matrices(quality)
         return AllocationProblem(delta=self._delta, gamma=self._gamma,
                                  c=self.quality_vector(quality),
-                                 reduction=self.domain.reduction)
+                                 reduction=self.domain.reduction,
+                                 resource=None if cap is None else cap[0],
+                                 capacity=None if cap is None else cap[1])
 
     def allocate(self, quality=None, method: str = "milp", **solver_kw) -> Allocation:
         return SOLVERS[method](self.problem(quality), **solver_kw)

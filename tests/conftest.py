@@ -1,0 +1,67 @@
+"""Shared test configuration: hypothesis settings profiles.
+
+The property suites (test_allocation.py, test_metrics.py,
+test_dispatch_properties.py, test_capacity.py) run under a named
+hypothesis profile declared in ``pyproject.toml``
+(``[tool.hypothesis.profiles.*]``), selected with the
+``HYPOTHESIS_PROFILE`` environment variable — ``fast`` (default, the CI
+matrix legs) keeps them cheap, ``full`` (the CI full leg) widens the
+sweep. Both are derandomized so neither leg flakes: a failing example
+reproduces on every run.
+
+Python 3.10 ships no tomllib, so the flat profile tables are parsed with
+a minimal line parser; the in-code defaults below mirror the file and are
+used if the file is unreadable. Environments without hypothesis installed
+skip all of this (the property modules importorskip it).
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+
+try:
+    from hypothesis import settings
+except ImportError:  # property-test modules importorskip hypothesis
+    settings = None
+
+#: mirrors [tool.hypothesis.profiles.*] in pyproject.toml
+_DEFAULTS: dict[str, dict] = {
+    "fast": {"max_examples": 25, "derandomize": True},
+    "full": {"max_examples": 100, "derandomize": True},
+}
+
+
+def _profiles_from_pyproject() -> dict[str, dict]:
+    path = pathlib.Path(__file__).resolve().parent.parent / "pyproject.toml"
+    try:
+        text = path.read_text()
+    except OSError:
+        return _DEFAULTS
+    profiles: dict[str, dict] = {}
+    current: dict | None = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        head = re.fullmatch(r"\[tool\.hypothesis\.profiles\.([\w-]+)\]", line)
+        if head:
+            current = profiles.setdefault(head.group(1), {})
+            continue
+        if line.startswith("["):
+            current = None
+            continue
+        if current is None:
+            continue
+        kv = re.fullmatch(r"(\w+)\s*=\s*([\w-]+)\s*(?:#.*)?", line)
+        if kv:
+            key, value = kv.groups()
+            current[key] = ({"true": True, "false": False}[value]
+                            if value in ("true", "false") else int(value))
+    return profiles or _DEFAULTS
+
+
+if settings is not None:
+    for _name, _kw in _profiles_from_pyproject().items():
+        # no deadline: property examples run real solvers (HiGHS, the JAX
+        # annealer) whose first call includes compile time
+        settings.register_profile(_name, deadline=None, **_kw)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "fast"))
