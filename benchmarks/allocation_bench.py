@@ -29,6 +29,18 @@ OnlineScheduler`) detects it, re-fits the metric models from execute-time
 records and re-solves the remaining work. Tracked: the adaptation speedup
 (regression bar: >= 1.5x), re-solve counts and wall time, and that the
 unperturbed online run still solves exactly once.
+
+The ``faults`` section (PR 6 onward) runs the same instance through a
+scripted three-kind fault storm — a flaky window on the Desktop
+(transient blips), a finite outage on the FPGA, a corrupt window on the
+GPU — scaled to the no-fault online makespan. The static leg has no
+fault layer and dies on the first unhandled fault (work stranded); the
+adaptive leg retries the blips, discards the corrupt records, opens the
+FPGA's circuit breaker and re-admits it after a recovery probe, and
+completes every task to the accuracy target (0 lost tasks) with makespan
+within ``FAULT_MAKESPAN_BAR``x of the no-fault run (regression bar).
+Tracked: the makespan ratio, retry/probe counts, and the breaker's
+transition history.
 """
 from __future__ import annotations
 
@@ -55,6 +67,12 @@ ONLINE_ROUNDS = 8
 #: at most this many task-equivalents (16 tasks over 4 platforms must
 #: spread — the unconstrained optimum concentrates harder than this).
 CAPACITY_SLOTS = 5.0
+#: canonical storm: flaky-dispatch probability on the Desktop during the
+#: opening window of the faults section.
+FLAKY_P = 0.2
+#: regression bar for the faults section: the adaptive run must complete
+#: the stormed workload within this factor of the no-fault makespan.
+FAULT_MAKESPAN_BAR = 1.5
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_allocation.json")
 
@@ -227,6 +245,72 @@ def main(fast: bool = True) -> None:
          f"resolves={adaptive.n_resolves};"
          f"unperturbed_resolves={control.n_resolves}")
 
+    # -- faults: the scripted storm A/B — static dies, adaptive survives --
+    from repro.runtime import RetryPolicy
+    from repro.runtime.faults import DispatchFault
+
+    # the unperturbed control run above is exactly the no-fault baseline
+    m0 = control.measured_makespan
+
+    def storm_scenario():
+        return (Scenario()
+                .flaky("Desktop", p=FLAKY_P, seed=5, t=0.0, end=0.4 * m0)
+                .outage("Local FPGA 1", t=0.1 * m0, end=0.35 * m0)
+                .corrupt("Local GPU 1", t=0.15 * m0, end=0.2 * m0))
+
+    static_fault_sched, _ = fresh_scheduler(storm_scenario())
+    static_alloc = static_fault_sched.allocate(ACCURACY, method="milp",
+                                               time_limit=30)
+    try:
+        static_fault_sched.execute(static_alloc, ACCURACY, seed=3)
+        static_leg = {"failed": False}
+    except DispatchFault as exc:
+        # the demonstrable failure the fault layer exists to prevent: the
+        # first unhandled fault kills the run mid-workload
+        static_leg = {"failed": True, "error": type(exc).__name__,
+                      "salvaged_records": len(exc.records)}
+
+    storm_sched, _ = fresh_scheduler(storm_scenario())
+    storm_cfg = OnlineConfig(rounds=ONLINE_ROUNDS,
+                             breaker_cooldown=0.08 * m0, outage_failures=1,
+                             retry=RetryPolicy(max_attempts=4, budget=16))
+    storm_rep = OnlineScheduler(storm_sched, storm_cfg).run(
+        ACCURACY, method="milp", seed=3, time_limit=30)
+    lost = sum(1 for t in tasks
+               if storm_rep.summary["measured_ci"][t.task_id] > ACCURACY * 1.25)
+    faults = {
+        "scenario": {"flaky": {"platform": "Desktop", "p": FLAKY_P,
+                               "end": 0.4 * m0},
+                     "outage": {"platform": "Local FPGA 1", "t": 0.1 * m0,
+                                "end": 0.35 * m0},
+                     "corrupt": {"platform": "Local GPU 1", "t": 0.15 * m0,
+                                 "end": 0.2 * m0}},
+        "no_fault_makespan": m0,
+        "static": static_leg,
+        "adaptive_makespan": storm_rep.measured_makespan,
+        "makespan_ratio": storm_rep.measured_makespan / m0,
+        "makespan_bar": FAULT_MAKESPAN_BAR,
+        "n_retries": storm_rep.n_retries,
+        "n_probes": storm_rep.n_probes,
+        "recovered_platforms": list(storm_rep.recovered_platforms),
+        "dead_platforms": list(storm_rep.dead_platforms),
+        "breaker_transitions": [
+            {"platform": t.platform, "from": t.frm, "to": t.to,
+             "at": t.at, "round": t.round}
+            for t in storm_rep.breaker_transitions],
+        "fault_counts": {
+            kind: sum(1 for e in storm_rep.fault_events if e.fault == kind)
+            for kind in sorted({e.fault for e in storm_rep.fault_events})},
+        "degraded_tasks": len({d.task_id for d in storm_rep.degradations}),
+        "lost_tasks": lost,
+    }
+    emit("allocation.faults", storm_rep.measured_makespan * 1e6,
+         f"ratio={faults['makespan_ratio']:.2f}x"
+         f"(bar={FAULT_MAKESPAN_BAR}x);"
+         f"retries={storm_rep.n_retries};"
+         f"recovered={len(storm_rep.recovered_platforms)};"
+         f"lost={lost};static_failed={static_leg['failed']}")
+
     payload = {
         "benchmark": "allocation_16x4",
         "instance": {"tasks": N_TASKS, "platforms": len(platforms),
@@ -238,6 +322,7 @@ def main(fast: bool = True) -> None:
         "capacity": capacity,
         "overlap": overlap,
         "online": online,
+        "faults": faults,
     }
     with open(OUT_PATH, "w") as fh:
         json.dump(payload, fh, indent=2)

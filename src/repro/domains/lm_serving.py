@@ -404,7 +404,9 @@ class SimulatedLMPlatform(_LMPlatformBase):
                 pre *= stretched / max(latency, 1e-300)
                 latency = stretched
             if self.realtime:
-                time.sleep(latency * self.realtime)
+                # corrupt-window runs report a negated latency; the real
+                # work still took |latency| of wall clock
+                time.sleep(abs(latency) * self.realtime)
             return ServeRecord(self.spec.name, req.task_id, n, latency,
                                prefill_latency=pre)
 
@@ -500,6 +502,11 @@ class LMServingDomain(Domain):
 
     def work_units(self, model: LMServingModel, quality: float) -> float:
         return float(quality)  # quality is measured in work units (tokens)
+
+    def degrade_quality(self, quality: float, step: float) -> float:
+        """Shorten the generation target by ``step`` (never below one
+        token): the latency win is linear in tokens dropped."""
+        return max(float(np.floor(quality * (1.0 - step))), 1.0)
 
     def record_units(self, record: ServeRecord) -> int:
         return int(record.n_tokens)

@@ -80,6 +80,11 @@ class PricingDomain(Domain):
     def work_units(self, model: TaskPlatformModel, quality: float) -> float:
         return model.accuracy.paths_for_accuracy(quality)  # eq. 8 inverted
 
+    def degrade_quality(self, quality: float, step: float) -> float:
+        """Loosen the CI target by ``step`` — via eq. 9's inverse-square
+        law, a 25% looser CI needs ~36% fewer paths."""
+        return quality * (1.0 + step)
+
     def record_units(self, record: RunRecord) -> int:
         return int(record.n_paths)
 

@@ -266,7 +266,9 @@ class SimulatedPlatform:
         k = max(n_paths - 1, 1)
         ci = alpha / math.sqrt(n_paths) * math.sqrt(rng.chisquare(min(k, 10**6)) / min(k, 10**6))
         if self.realtime:
-            time.sleep(latency * self.realtime)
+            # corrupt-window runs report a negated latency; the real work
+            # still took |latency| of wall clock
+            time.sleep(abs(latency) * self.realtime)
         return RunRecord(self.spec.name, task.task_id, n_paths, price, ci, latency)
 
 

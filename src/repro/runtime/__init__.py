@@ -11,6 +11,19 @@ generic :class:`Scheduler` that drives the loop over the shared
 """
 from .domain import Domain, PlatformSpec, RunRecordLike, seed_for  # noqa: F401
 from .executor import Executor, TimedResult  # noqa: F401
+from .faults import (  # noqa: F401
+    BreakerTransition,
+    CircuitBreaker,
+    CorruptResult,
+    DegradationEvent,
+    DispatchFault,
+    DispatchTimeout,
+    FaultEvent,
+    JobCancelled,
+    RetryPolicy,
+    TransientFault,
+    check_records,
+)
 from .online import (  # noqa: F401
     DriftDetector,
     OnlineConfig,

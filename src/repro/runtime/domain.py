@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.core.allocation import mc_work_reduction
 from .executor import Executor
-from .scenario import PlatformOutage
+from .faults import DispatchFault
 
 __all__ = ["Domain", "PlatformSpec", "RunRecordLike", "seed_for"]
 
@@ -171,11 +171,11 @@ class Domain(abc.ABC):
         record persistence. Concurrent platform jobs write disjoint keys,
         so a plain dict is safe.
 
-        ``skip_unavailable`` makes a platform raising
-        :class:`~repro.runtime.scenario.PlatformOutage` mid-benchmark
-        contribute only the pairs it completed instead of failing the
-        whole sweep — mid-run incremental characterisation is inherently
-        outage-exposed; the caller fills the gaps."""
+        ``skip_unavailable`` makes a platform raising a
+        :class:`~repro.runtime.faults.DispatchFault` (outage or transient
+        blip) mid-benchmark contribute only the pairs it completed instead
+        of failing the whole sweep — mid-run incremental characterisation
+        is inherently fault-exposed; the caller fills the gaps."""
         groups = self.group_tasks(self.tasks if tasks is None else list(tasks))
         sweep = self.platforms if platforms is None else list(platforms)
 
@@ -190,7 +190,7 @@ class Domain(abc.ABC):
                         fitted[key] = self.fit_models(recs)
                         if record_sink is not None:
                             record_sink[key] = recs
-            except PlatformOutage:
+            except DispatchFault:
                 if not skip_unavailable:
                     raise
             return fitted
@@ -219,6 +219,31 @@ class Domain(abc.ABC):
         constants do not swamp high-RTT platforms under round-based
         dispatch."""
         return float(model.latency.beta), float(model.latency.gamma)
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def degrade_quality(self, quality: float, step: float) -> float:
+        """Relax one task's quality target by ``step`` along this domain's
+        accuracy-for-latency trade-off (the paper's central asset): a CI
+        domain loosens the target, a throughput domain shortens it. The
+        online loop's graceful degradation walks its rung ladder through
+        this hook when the surviving fleet cannot meet the original
+        targets. ``step`` is cumulative from the *base* quality (rung 2 of
+        ladder (0.25, 0.5) passes 0.5, not 0.25 twice). Default: no
+        trade-off to exploit — the quality stands."""
+        return quality
+
+    def advance_platform(self, platform, elapsed: float) -> None:
+        """Sync an *idle* platform's virtual clock to the workload's
+        elapsed time. A platform sitting out rounds behind an open circuit
+        breaker does not execute, but wall time still passes for it — on
+        simulated platforms the virtual clock only advances with work, so
+        without this sync a finite outage window would never end for a
+        platform receiving only cheap probes. No-op for platforms with no
+        virtual clock (real hardware lives on the host clock)."""
+        clock = getattr(platform, "clock", None)
+        if clock is not None:
+            platform.clock = max(clock, elapsed)
 
     # -- capacity (optional second constraint dimension) -------------------
 

@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core import (
     Allocation,
+    CapacityError,
     SUPPORT_ATOL,
     expand_allocation,
     restrict_allocation,
@@ -60,6 +61,17 @@ from repro.core import (
 )
 from repro.core.metrics import AccuracyModel, CombinedModel, LatencyModel
 from .domain import RunRecordLike, seed_for
+from .faults import (
+    HALF_OPEN,
+    CircuitBreaker,
+    DegradationEvent,
+    DispatchFault,
+    FaultEvent,
+    RetryPolicy,
+    check_records,
+    count_retries,
+    fault_kind,
+)
 from .scenario import PlatformOutage, Scenario
 from .scheduler import SOLVERS, Scheduler
 
@@ -101,6 +113,26 @@ class OnlineConfig:
     #: platform like AWS EC1 (89 ms RTT) would be billed it every round.
     #: 16 caps the constant at ~6% of each dispatch's work.
     gamma_duty: float = 16.0
+    #: retry policy arming the per-dispatch fault layer (transient blips
+    #: and corrupt results re-dispatched with deterministic backoff — see
+    #: :class:`repro.runtime.faults.RetryPolicy`). None leaves faults
+    #: unhandled: a transient fault then fails the round like an outage.
+    retry: RetryPolicy | None = None
+    #: circuit-breaker cooldown, in *workload elapsed virtual time*: an
+    #: OPEN (dead) platform goes HALF_OPEN after this long and is probed
+    #: with a cheap seeded dispatch; success re-admits it to allocation.
+    #: The default inf reproduces the legacy one-way dead set (platforms
+    #: never come back).
+    breaker_cooldown: float = math.inf
+    #: graceful-degradation rung ladder: cumulative relaxation steps fed
+    #: to ``Domain.degrade_quality`` when a re-solve is infeasible
+    #: (CapacityError) or blows ``deadline_s``. Empty = degradation off:
+    #: an infeasible re-solve propagates.
+    degrade_steps: tuple[float, ...] = ()
+    #: predicted-finish deadline (virtual seconds) that triggers quality
+    #: degradation when the surviving fleet cannot meet it. None = no
+    #: deadline pressure; CapacityError still triggers the ladder.
+    deadline_s: float | None = None
 
 
 #: effectively-infinite per-unit latency, but small enough that the MILP's
@@ -189,6 +221,8 @@ class RoundLog:
     resolved: bool
     #: "solved" | "skipped" (warm-start early exit) | None (no re-solve).
     solve_outcome: str | None
+    #: platforms whose breaker probe succeeded this round (re-admitted).
+    revived: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -213,6 +247,13 @@ class OnlineReport:
     platform_wall_s: dict[str, float] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
     mode: str = "sequential"
+    #: fault-layer audit trails (see repro.runtime.faults)
+    fault_events: list = dataclasses.field(default_factory=list)
+    degradations: list = dataclasses.field(default_factory=list)
+    breaker_transitions: list = dataclasses.field(default_factory=list)
+    n_retries: int = 0              # retried dispatch attempts, all rounds
+    n_probes: int = 0               # breaker recovery probes dispatched
+    recovered_platforms: tuple[str, ...] = ()  # died then re-admitted
 
     @property
     def makespan_error(self) -> float:
@@ -337,6 +378,111 @@ class OnlineScheduler:
                 if quota > 0:
                     quotas[(pname, tid)] = quota
         return alloc, A_full, quotas
+
+    def _effective_quality(self, quality, rung: int):
+        """Quality target at degradation ``rung`` (0 = the original).
+
+        Recomputed from the *base* quality over the current task list each
+        time, so arrivals are covered and rung k applies the ladder's
+        cumulative step, not a compounding of earlier rungs."""
+        if rung == 0:
+            return quality
+        step = self.config.degrade_steps[rung - 1]
+        c = self.scheduler.quality_vector(quality)
+        return np.array([self.domain.degrade_quality(float(cj), step)
+                         for cj in c])
+
+    def _degrade(self, quality, rung: int, active_tids, round_idx: int,
+                 reason: str, degradations: list) -> int:
+        """Step the rung ladder down one notch, itemising per active task."""
+        sched = self.scheduler
+        c_from = sched.quality_vector(self._effective_quality(quality, rung))
+        c_to = sched.quality_vector(self._effective_quality(quality, rung + 1))
+        for j, t in enumerate(self.domain.tasks):
+            if active_tids is None or t.task_id in active_tids:
+                degradations.append(DegradationEvent(
+                    task_id=t.task_id, round=round_idx,
+                    quality_from=float(c_from[j]), quality_to=float(c_to[j]),
+                    rung=rung + 1, reason=reason))
+        return rung + 1
+
+    def _solve_degraded(self, quality, rung: int, method: str, solver_kw: dict,
+                        alive: dict[str, bool], done: dict[int, float],
+                        incumbent_A, elapsed=None, done_pair=None,
+                        active_tids=None, round_idx: int = -1,
+                        degradations: list | None = None):
+        """:meth:`_solve` wrapped in the graceful-degradation ladder.
+
+        An infeasible restricted problem (typed :class:`CapacityError` —
+        the surviving fleet cannot even hold the active tasks' resources)
+        or a feasible plan whose predicted finish blows ``deadline_s``
+        relaxes the quality targets one rung (``Domain.degrade_quality``)
+        and re-solves, trading the paper's central asset — accuracy — for
+        latency instead of failing. The rung is monotone across the run
+        (quality never silently recovers mid-workload: reporting is
+        simpler and re-fit windows stay regime-consistent). Ladder
+        exhausted: CapacityError propagates, a blown deadline is accepted
+        as best effort. Returns (alloc, A_full, quotas, rung)."""
+        cfg = self.config
+        degradations = degradations if degradations is not None else []
+        while True:
+            try:
+                alloc, A_full, quotas = self._solve(
+                    self._effective_quality(quality, rung), method, solver_kw,
+                    alive, done, incumbent_A, elapsed=elapsed,
+                    done_pair=done_pair)
+            except CapacityError:
+                if rung >= len(cfg.degrade_steps):
+                    raise
+                rung = self._degrade(quality, rung, active_tids, round_idx,
+                                     "capacity", degradations)
+                continue
+            if (alloc is not None and cfg.deadline_s is not None
+                    and alloc.makespan > cfg.deadline_s
+                    and rung < len(cfg.degrade_steps)):
+                rung = self._degrade(quality, rung, active_tids, round_idx,
+                                     "deadline", degradations)
+                continue
+            return alloc, A_full, quotas, rung
+
+    def _probe(self, p, round_idx: int, seed: int, elapsed: float,
+               quotas: dict[tuple[str, int], float]):
+        """Cheap seeded dispatch testing a HALF_OPEN platform's health.
+
+        The platform idled while its breaker was open, but wall time kept
+        passing — ``Domain.advance_platform`` syncs its virtual clock to
+        the fleet's elapsed time first, so a finite outage window ends
+        after a bounded number of probes instead of never (the clock would
+        otherwise only creep by one retry cost per probe). The probe is
+        ``min_chunk`` units of the first still-active task: real work, so
+        a successful probe's records count toward completion. Returns None
+        when no active work remains to probe with, else
+        (ok, records, FaultEvent)."""
+        domain = self.domain
+        pname = domain.platform_name(p)
+        active = {tid for (_pn, tid), q in quotas.items() if q > 0}
+        task = next((t for t in domain.tasks if t.task_id in active), None)
+        if task is None:
+            return None
+        domain.advance_platform(p, elapsed)
+        clock0 = getattr(p, "clock", None)
+        probe_seed = seed_for(seed, pname, ("probe", domain.launch_key(task)),
+                              round_idx)
+        try:
+            recs = domain.dispatch_batch(p, [task], [domain.min_chunk],
+                                         seed=probe_seed)
+            check_records(recs)
+            return True, recs, FaultEvent(
+                pname, task.task_id, round_idx, "probe", "probe-ok")
+        except DispatchFault as exc:
+            salvaged = list(getattr(exc, "records", []))
+            burned = 0.0
+            if clock0 is not None:
+                burned = max(getattr(p, "clock", clock0) - clock0
+                             - sum(r.latency for r in salvaged), 0.0)
+            return False, salvaged, FaultEvent(
+                pname, task.task_id, round_idx, fault_kind(exc),
+                "probe-failed", latency=burned)
 
     def _plan_round(self, quotas: dict[tuple[str, int], float],
                     alive: dict[str, bool], round_idx: int,
@@ -469,8 +615,10 @@ class OnlineScheduler:
         if sched.models is None:
             sched.characterise(mode=mode, **(characterise_kw or {}))
 
-        alive = {domain.platform_name(p): True for p in domain.platforms}
-        fail_count: dict[str, int] = {pn: 0 for pn in alive}
+        names = [domain.platform_name(p) for p in domain.platforms]
+        breaker = CircuitBreaker(failure_threshold=cfg.outage_failures,
+                                 cooldown_s=cfg.breaker_cooldown)
+        alive = {pn: True for pn in names}
         done: dict[int, float] = {}
         done_pair: dict[tuple[str, int], float] = {}
         windows: dict[tuple[str, int], deque] = {
@@ -478,11 +626,15 @@ class OnlineScheduler:
             for key, recs in sched.characterise_records.items()}
         detector = DriftDetector(cfg.drift_window, cfg.drift_threshold,
                                  cfg.min_drift_records)
+        fault_events: list[FaultEvent] = []
+        degradations: list[DegradationEvent] = []
+        recovered: set[str] = set()
+        rung, n_probes = 0, 0
 
         solve_t0 = time.perf_counter()
-        alloc, A_full, quotas = self._solve(
-            quality, method, solver_kw, alive, done, incumbent_A=None,
-            done_pair=done_pair)
+        alloc, A_full, quotas, rung = self._solve_degraded(
+            quality, rung, method, solver_kw, alive, done, incumbent_A=None,
+            done_pair=done_pair, degradations=degradations)
         solve_wall = time.perf_counter() - solve_t0
         resolve_wall = 0.0
         if alloc is None:
@@ -497,6 +649,45 @@ class OnlineScheduler:
         rounds: list[RoundLog] = []
 
         for round_idx in range(cfg.max_rounds):
+            # breaker recovery at the round barrier: OPEN platforms whose
+            # cooldown (in workload elapsed virtual time) has passed go
+            # HALF_OPEN and take a cheap probe; a clean probe re-admits
+            # them to the allocation (the one-way dead set, undone)
+            elapsed = max(plat_lat.values(), default=0.0)
+            revived: list[str] = []
+            for p in domain.platforms:
+                pname = domain.platform_name(p)
+                if breaker.poll(pname, elapsed, round_idx) != HALF_OPEN:
+                    continue
+                outcome = self._probe(p, round_idx, seed, elapsed, quotas)
+                if outcome is None:
+                    continue
+                ok, recs, event = outcome
+                n_probes += 1
+                fault_events.append(event)
+                probe_lat = 0.0
+                for rec in recs:
+                    all_records.append(rec)
+                    probe_lat += rec.latency
+                    units = domain.record_units(rec)
+                    done[rec.task_id] = done.get(rec.task_id, 0.0) + units
+                    key = (pname, rec.task_id)
+                    done_pair[key] = done_pair.get(key, 0.0) + units
+                    quotas[key] = max(quotas.get(key, 0.0) - units, 0.0)
+                    windows.setdefault(
+                        key, deque(maxlen=cfg.refit_window)).append(rec)
+                if ok:
+                    breaker.record_success(pname, elapsed, round_idx)
+                    # the platform idled while down: its timeline resumes
+                    # at the fleet's elapsed time, not at its stale sum
+                    plat_lat[pname] = max(plat_lat[pname],
+                                          elapsed + probe_lat)
+                    alive[pname] = True
+                    revived.append(pname)
+                    recovered.add(pname)
+                else:
+                    breaker.record_failure(pname, elapsed, round_idx)
+
             if not any(q > 0 for q in quotas.values()):
                 # drain the arrival queue: no more work means virtual time
                 # cannot advance to reach stragglers, so they join now
@@ -511,7 +702,14 @@ class OnlineScheduler:
             results, _round_wall = ([], 0.0) if not plan else sched.dispatch_plan(
                 plan,
                 seed=lambda pn, key, _r=round_idx: seed_for(seed, pn, key, _r),
-                mode=mode, catch=(PlatformOutage,))
+                mode=mode,
+                # with the retry layer armed, retry-exhausted transients
+                # and corrupt dispatches degrade to per-platform errors the
+                # breaker counts; unarmed, only outages are survivable —
+                # the legacy (and deliberately brittle) behaviour
+                catch=(DispatchFault,) if cfg.retry is not None
+                else (PlatformOutage,),
+                retry=cfg.retry, round_idx=round_idx)
 
             dispatched: dict[str, int] = {}
             failed: list[str] = []
@@ -533,24 +731,33 @@ class OnlineScheduler:
                         pname,
                         domain.predicted_latency(solve_models[key], units),
                         rec.latency)
+                for ev in res.faults:
+                    fault_events.append(ev)
+                    # retries burn real virtual time on the platform's
+                    # timeline — a storm honestly inflates its makespan
+                    plat_lat[pname] += ev.latency
                 if res.error is not None:
                     failed.append(pname)
-                    fail_count[pname] += 1
 
-            # any round a platform does NOT fail — dispatching cleanly or
-            # sitting idle — breaks its failure streak: the death gate
-            # counts *consecutive* failed rounds, so two isolated hiccups
+            # feed round outcomes to the breaker: a failed round advances
+            # a platform's streak, a clean dispatching round breaks it, an
+            # idle round breaks it too — the death gate counts
+            # *consecutive* failed rounds, so two isolated hiccups
             # separated by quiet rounds must not accumulate
-            for pn in fail_count:
-                if pn not in failed:
-                    fail_count[pn] = 0
-
-            newly_dead = [pn for pn in failed
-                          if alive[pn] and fail_count[pn] >= cfg.outage_failures]
-            for pn in newly_dead:
-                alive[pn] = False
-
             elapsed = max(plat_lat.values(), default=0.0)
+            planned = {domain.platform_name(p) for p, _ in plan}
+            was_dead = {pn: not breaker.available(pn) for pn in names}
+            for pn in names:
+                if pn in failed:
+                    breaker.record_failure(pn, elapsed, round_idx)
+                elif pn in planned:
+                    breaker.record_success(pn, elapsed, round_idx)
+                else:
+                    breaker.reset_streak(pn)
+            newly_dead = [pn for pn in failed
+                          if not was_dead[pn] and not breaker.available(pn)]
+            for pn in names:
+                alive[pn] = breaker.available(pn)
             arrived = list(late)
             if scenario is not None:
                 arrived += scenario.take_arrivals(elapsed)
@@ -587,15 +794,24 @@ class OnlineScheduler:
             drifted = detector.drifted(alive)
             outcome = None
             resolved = False
-            if drifted or newly_dead or arrived:
+            if drifted or newly_dead or arrived or revived:
                 self._heal_unreachable(alive, mode, characterise_kw)
                 self._refit(windows, detector, drifted, alive, solve_models)
                 n_refits += 1
+                active_tids = ({tid for (_pn, tid), q in quotas.items()
+                                if q > 0}
+                               | {t.task_id for t in arrived})
                 solve_t0 = time.perf_counter()
-                alloc2, A2, quotas2 = self._solve(
-                    quality, method, solver_kw, alive, done,
-                    incumbent_A=A_full, elapsed=plat_lat,
-                    done_pair=done_pair)
+                # a revived platform has zero share in the incumbent by
+                # construction, so the warm-start shortcut would wave the
+                # old allocation through and the re-admitted platform
+                # would never see work again — force a real solve
+                alloc2, A2, quotas2, rung = self._solve_degraded(
+                    quality, rung, method, solver_kw, alive, done,
+                    incumbent_A=None if revived else A_full,
+                    elapsed=plat_lat,
+                    done_pair=done_pair, active_tids=active_tids,
+                    round_idx=round_idx, degradations=degradations)
                 dt = time.perf_counter() - solve_t0
                 resolve_wall += dt
                 solve_wall += dt
@@ -617,7 +833,8 @@ class OnlineScheduler:
             rounds.append(RoundLog(
                 round=round_idx, dispatched_units=dispatched,
                 drifted=drifted, failed=tuple(failed), arrivals=len(arrived),
-                resolved=resolved, solve_outcome=outcome))
+                resolved=resolved, solve_outcome=outcome,
+                revived=tuple(revived)))
 
         else:
             if any(q > 0 for q in quotas.values()):
@@ -626,7 +843,10 @@ class OnlineScheduler:
                     f"work remaining — no progress on "
                     f"{sorted(k for k, q in quotas.items() if q > 0)}")
 
-        problem = sched.problem(quality)
+        # summarise against the final (possibly degraded) quality targets —
+        # predicted CI / requested tokens must reflect what the run was
+        # actually asked to deliver after the ladder stepped down
+        problem = sched.problem(self._effective_quality(quality, rung))
         return OnlineReport(
             allocation=alloc,
             predicted_makespan=predicted0,
@@ -646,4 +866,10 @@ class OnlineScheduler:
             platform_wall_s=plat_wall,
             wall_s=time.perf_counter() - t_run,
             mode=sched._executor(mode).mode,
+            fault_events=fault_events,
+            degradations=degradations,
+            breaker_transitions=list(breaker.transitions),
+            n_retries=count_retries(fault_events),
+            n_probes=n_probes,
+            recovered_platforms=tuple(sorted(recovered)),
         )

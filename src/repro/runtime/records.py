@@ -29,6 +29,11 @@ __all__ = ["dump_records", "load_records", "group_records",
 _BUILTIN: dict[str, str] = {
     "RunRecord": "repro.pricing.platforms:RunRecord",
     "ServeRecord": "repro.domains.lm_serving:ServeRecord",
+    # fault-layer audit trails: a run's fault history persists next to
+    # its execution records
+    "FaultEvent": "repro.runtime.faults:FaultEvent",
+    "DegradationEvent": "repro.runtime.faults:DegradationEvent",
+    "BreakerTransition": "repro.runtime.faults:BreakerTransition",
 }
 
 _REGISTRY: dict[str, type] = {}
@@ -61,7 +66,14 @@ def dump_records(records: Iterable[Any], path: str | os.PathLike) -> int:
             if not dataclasses.is_dataclass(rec):
                 raise TypeError(
                     f"records must be dataclasses, got {type(rec).__name__}")
-            row = {"kind": type(rec).__name__, **dataclasses.asdict(rec)}
+            fields = dataclasses.asdict(rec)
+            if "kind" in fields:
+                # the envelope key is reserved for the class name; a field
+                # named "kind" would silently shadow it and break load
+                raise TypeError(
+                    f"{type(rec).__name__} has a field named 'kind', which "
+                    f"the JSONL envelope reserves for the record class")
+            row = {"kind": type(rec).__name__, **fields}
             fh.write(json.dumps(row) + "\n")
             n += 1
     return n

@@ -11,17 +11,25 @@ has executed so far):
     sc = (Scenario()
           .slowdown("Local GPU 1", t=1.6, factor=4.0)   # degrade from t on
           .outage("AWS Server EC1", t=2.0)              # dispatches fail
+          .flaky("Desktop", p=0.2, t=0.5, end=2.0)      # transient blips
+          .corrupt("Local FPGA 1", t=1.0, end=1.2)      # bad records back
           .arrive(t=0.8, task=extra_task))              # joins mid-workload
 
 Keying on virtual (not host) time makes a scenario a pure function of what
 was dispatched: concurrent and sequential runs see identical perturbations,
 so the online loop's bitwise mode parity survives drift injection. An
-outage makes ``run`` raise :class:`PlatformOutage` — the simulator advances
-the platform's clock by a retry cost per failed attempt so finite outage
-windows end after finitely many retries.
+outage makes ``run`` raise :class:`PlatformOutage`, a flaky window makes it
+raise :class:`TransientFault` with seeded probability — in both cases the
+simulator advances the platform's clock by a retry cost per failed attempt
+so finite fault windows end after finitely many retries. A corrupt window
+poisons the run instead of failing it: the dispatch *returns*, the clock
+advances by the true latency (the work was done — and wasted), but the
+reported latency comes back negated, which the dispatcher's record sanity
+checks (:func:`repro.runtime.faults.check_records`) flag as a
+:class:`CorruptResult`.
 
-Slowdowns and outages are consumed by the platforms
-(:class:`repro.pricing.platforms.SimulatedPlatform`,
+Slowdowns, outages, flaky and corrupt windows are consumed by the
+platforms (:class:`repro.pricing.platforms.SimulatedPlatform`,
 :class:`repro.domains.lm_serving.SimulatedLMPlatform` — see their
 ``attach_scenario``); arrivals are consumed by the
 :class:`~repro.runtime.online.OnlineScheduler`, which admits queued tasks
@@ -31,21 +39,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any
 
-__all__ = ["Scenario", "PlatformOutage", "apply_scenario", "salvage_runs"]
+from repro.runtime.faults import DispatchFault, PlatformOutage, TransientFault
+
+__all__ = ["Scenario", "PlatformOutage", "TransientFault", "apply_scenario",
+           "salvage_runs"]
 
 
-class PlatformOutage(RuntimeError):
-    """A dispatch hit a platform inside one of its scenario outage windows.
-
-    ``records`` carries whatever the failing batch completed before the
-    outage struck — the platform's virtual clock already advanced for that
-    work, so dispatchers salvage it instead of re-executing it."""
-
-    def __init__(self, *args):
-        super().__init__(*args)
-        self.records: list[Any] = []
+def _retry_cost(platform) -> float:
+    """Virtual time a failed attempt burns (one round trip, floored)."""
+    return max(platform.spec.rtt_ms * 1e-3, 1e-3)
 
 
 def apply_scenario(platform, latency: float) -> float:
@@ -54,37 +59,49 @@ def apply_scenario(platform, latency: float) -> float:
     Consults ``platform.scenario`` at ``platform.clock``: inside an outage
     window the attempt raises :class:`PlatformOutage` after advancing the
     clock by a retry cost (a failed attempt still costs a round trip, so
-    finite windows end after finitely many retries); otherwise the clean
-    ``latency`` is stretched through the piecewise slowdown schedule and
-    the clock advanced by the result. With no scenario attached the
-    latency passes through untouched and no clock is tracked.
+    finite windows end after finitely many retries); a flaky window rolls a
+    seeded coin keyed on the clock and raises :class:`TransientFault` the
+    same way. Otherwise the clean ``latency`` is stretched through the
+    piecewise slowdown schedule and the clock advanced by the result —
+    negated on return if the run started inside a corrupt window (the work
+    happened and cost its true time, but the record it produces is bad).
+    With no scenario attached the latency passes through untouched and no
+    clock is tracked.
     """
     scenario = platform.scenario
     if scenario is None:
         return latency
     name = platform.spec.name
-    if scenario.in_outage(name, platform.clock):
-        platform.clock += max(platform.spec.rtt_ms * 1e-3, 1e-3)
+    start = platform.clock
+    if scenario.in_outage(name, start):
+        platform.clock += _retry_cost(platform)
         raise PlatformOutage(f"{name} is down at t={platform.clock:.3f}s")
-    latency = scenario.stretch(name, platform.clock, latency)
+    if scenario.flaky_failure(name, start):
+        platform.clock += _retry_cost(platform)
+        raise TransientFault(
+            f"{name} dropped a dispatch at t={platform.clock:.3f}s")
+    latency = scenario.stretch(name, start, latency)
     platform.clock += latency
+    if scenario.in_corrupt(name, start):
+        return -latency
     return latency
 
 
 def salvage_runs(run_one, items) -> list:
-    """Map ``run_one`` over ``items``, salvaging partial output on outage.
+    """Map ``run_one`` over ``items``, salvaging partial output on faults.
 
-    When a :class:`PlatformOutage` interrupts the sweep the results
-    completed so far are attached to the exception (``.records``) before
-    it propagates — the platform's virtual clock already ran that work, so
-    dispatchers keep it in the accounting instead of re-executing it. The
-    batched ``run_batch`` loops of both simulators share this one copy.
+    When a :class:`~repro.runtime.faults.DispatchFault` (outage *or*
+    transient blip) interrupts the sweep the results completed so far are
+    attached to the exception (``.records``) before it propagates — the
+    platform's virtual clock already ran that work, so dispatchers keep it
+    in the accounting instead of re-executing it. The batched ``run_batch``
+    loops of both simulators share this one copy.
     """
     out = []
     for item in items:
         try:
             out.append(run_one(item))
-        except PlatformOutage as exc:
+        except DispatchFault as exc:
             exc.records = out + exc.records
             raise
     return out
@@ -96,6 +113,15 @@ class _Window:
     start: float
     end: float
     factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _FlakyWindow:
+    platform: str
+    start: float
+    end: float
+    p: float
+    seed: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +142,8 @@ class Scenario:
     def __init__(self):
         self._slowdowns: list[_Window] = []
         self._outages: list[_Window] = []
+        self._flaky: list[_FlakyWindow] = []
+        self._corrupt: list[_Window] = []
         self._arrivals: list[_Arrival] = []
         self._admitted = 0
 
@@ -134,6 +162,32 @@ class Scenario:
         """From virtual time ``t`` (to ``end``), dispatches to the platform
         raise :class:`PlatformOutage` instead of running."""
         self._outages.append(_Window(platform, t, end))
+        return self
+
+    def flaky(self, platform: str, p: float, seed: int = 0, t: float = 0.0,
+              end: float = math.inf) -> "Scenario":
+        """From virtual time ``t`` (to ``end``), each dispatch attempt on
+        the platform fails with probability ``p`` as a retryable
+        :class:`TransientFault`.
+
+        The coin is a pure function of (seed, platform, virtual clock) —
+        no mutable RNG state — so concurrent and sequential runs see the
+        same blips, and because each failed attempt advances the clock by
+        a retry cost, consecutive retries draw fresh coins and a finite
+        window's storm always ends."""
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"flaky probability must be in [0, 1], got {p}")
+        self._flaky.append(_FlakyWindow(platform, t, end, p, seed))
+        return self
+
+    def corrupt(self, platform: str, t: float, end: float = math.inf) -> "Scenario":
+        """From virtual time ``t`` (to ``end``), dispatches on the platform
+        *return* but their records are poisoned (negated latency) — caught
+        downstream by record sanity checks as a
+        :class:`~repro.runtime.faults.CorruptResult`. The work still costs
+        its true virtual time: corruption wastes the run, unlike an outage
+        which prevents it."""
+        self._corrupt.append(_Window(platform, t, end))
         return self
 
     def arrive(self, t: float, task: Any) -> "Scenario":
@@ -156,6 +210,23 @@ class Scenario:
     def in_outage(self, platform: str, t: float) -> bool:
         return any(w.platform == platform and w.start <= t < w.end
                    for w in self._outages)
+
+    def flaky_failure(self, platform: str, t: float) -> bool:
+        """Seeded coin flip: does a dispatch starting at virtual time ``t``
+        hit a transient fault? Pure in (seed, platform, t) — ``repr(t)``
+        round-trips the float exactly, so the draw is bit-stable across
+        modes and replays."""
+        for w in self._flaky:
+            if w.platform == platform and w.start <= t < w.end:
+                key = f"flaky|{w.seed}|{platform}|{t!r}"
+                u = (zlib.crc32(key.encode()) & 0xFFFFFFFF) / 2**32
+                if u < w.p:
+                    return True
+        return False
+
+    def in_corrupt(self, platform: str, t: float) -> bool:
+        return any(w.platform == platform and w.start <= t < w.end
+                   for w in self._corrupt)
 
     def stretch(self, platform: str, t0: float, clean: float) -> float:
         """Wall-clock duration of ``clean`` seconds of unit-factor work

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from typing import Any, Callable, Hashable, Sequence
 
@@ -37,6 +38,14 @@ from repro.core import (
 )
 from .domain import Domain, RunRecordLike
 from .executor import Executor
+from .faults import (
+    DispatchFault,
+    FaultEvent,
+    JobCancelled,
+    RetryPolicy,
+    check_records,
+    fault_kind,
+)
 
 __all__ = ["Scheduler", "RuntimeReport", "DispatchResult", "SOLVERS"]
 
@@ -58,6 +67,8 @@ class DispatchResult:
     records: list
     wall_s: float
     error: BaseException | None = None
+    #: fault-layer audit trail: one event per fault the retry loop handled
+    faults: tuple[FaultEvent, ...] = ()
 
 
 @dataclasses.dataclass
@@ -81,6 +92,11 @@ class RuntimeReport:
     platform_wall_s: dict[str, float] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
     mode: str = "sequential"
+    #: fault-layer audit trails (see repro.runtime.faults): every fault the
+    #: retry loop handled, and every quality-target relaxation the online
+    #: loop's graceful degradation applied.
+    fault_events: list = dataclasses.field(default_factory=list)
+    degradations: list = dataclasses.field(default_factory=list)
 
     @property
     def makespan_error(self) -> float:
@@ -274,6 +290,9 @@ class Scheduler:
         seed: int | Callable[[str, Hashable], int] = 3,
         mode: str | None = None,
         catch: tuple[type[BaseException], ...] = (),
+        retry: RetryPolicy | None = None,
+        round_idx: int = 0,
+        cancel: threading.Event | None = None,
     ) -> tuple[list[DispatchResult], float]:
         """Dispatch an explicit per-platform plan; the partial-dispatch hook.
 
@@ -290,33 +309,94 @@ class Scheduler:
         :func:`repro.runtime.domain.seed_for` — what keeps concurrent and
         sequential online runs bitwise-identical.
 
-        Exception types in ``catch`` (e.g. ``PlatformOutage``) are captured
-        per platform into :attr:`DispatchResult.error` with the records
+        ``retry`` arms the fault layer: retryable faults (transient blips,
+        corrupt results — see :class:`~repro.runtime.faults.RetryPolicy`)
+        re-dispatch the unsalvaged remainder of the failing group with
+        deterministic backoff, bounded per dispatch by ``max_attempts`` and
+        per (platform, round) by ``budget``; returned records are
+        sanity-checked (:func:`~repro.runtime.faults.check_records`, bad
+        records discarded and their tasks re-dispatched); every handled
+        fault is logged into :attr:`DispatchResult.faults` with the virtual
+        time it burned (platform clock delta minus salvaged record
+        latencies) so makespan accounting charges storms honestly.
+
+        Exception types in ``catch`` (e.g. ``PlatformOutage``) — and
+        retry-exhausted retryable faults when they match — are captured per
+        platform into :attr:`DispatchResult.error` with the records
         produced before the failure kept; anything else propagates.
+        ``cancel``, when set mid-round, skips the platform's not-yet-started
+        launch groups (:class:`~repro.runtime.faults.JobCancelled`).
         """
         executor = self._executor(mode)
+        catchable = (DispatchFault,) + tuple(catch)
 
         def run_platform(shard) -> DispatchResult:
             p, groups = shard
             pname = self.domain.platform_name(p)
             recs: list[RunRecordLike] = []
+            faults: list[FaultEvent] = []
             error: BaseException | None = None
+            budget = retry.budget if retry is not None else 0
             for group in groups:
+                if cancel is not None and cancel.is_set():
+                    error = JobCancelled(
+                        f"{pname}: remaining launch groups cancelled")
+                    break
                 gtasks = [t for t, _ in group]
-                g_units = [u for _, u in group]
                 group_seed = (seed(pname, self.domain.launch_key(gtasks[0]))
                               if callable(seed) else seed)
-                try:
-                    recs.extend(self.domain.dispatch_batch(
-                        p, gtasks, g_units, seed=group_seed))
-                except catch as exc:
-                    # a batch failing mid-way may carry the records it
-                    # completed first (see PlatformOutage.records) — that
-                    # work already ran, so keep it in the accounting
-                    recs.extend(getattr(exc, "records", []))
-                    error = exc
+                pending = list(group)
+                attempt = 1
+                while pending:
+                    clock0 = getattr(p, "clock", None)
+                    try:
+                        new = self.domain.dispatch_batch(
+                            p, [t for t, _ in pending],
+                            [u for _, u in pending], seed=group_seed)
+                        if retry is not None:
+                            check_records(new)
+                        recs.extend(new)
+                        break
+                    except catchable as exc:
+                        # a batch failing mid-way may carry the records it
+                        # completed first (DispatchFault.records) — that
+                        # work already ran, so keep it in the accounting
+                        salvaged = list(getattr(exc, "records", []))
+                        recs.extend(salvaged)
+                        burned = 0.0
+                        if clock0 is not None:
+                            burned = max(
+                                getattr(p, "clock", clock0) - clock0
+                                - sum(r.latency for r in salvaged), 0.0)
+                        kind = fault_kind(exc)
+                        if (retry is not None and retry.retryable(exc)
+                                and attempt < retry.max_attempts
+                                and budget > 0):
+                            budget -= 1
+                            faults.append(FaultEvent(
+                                pname, -1, round_idx, kind, "retried",
+                                attempt, burned))
+                            done = {r.task_id for r in salvaged}
+                            pending = [(t, u) for t, u in pending
+                                       if t.task_id not in done]
+                            pause = retry.delay(
+                                0 if callable(seed) else seed,
+                                pname, round_idx, attempt)
+                            if pause > 0.0:
+                                time.sleep(pause)
+                            attempt += 1
+                            continue
+                        faults.append(FaultEvent(
+                            pname, -1, round_idx, kind, "exhausted",
+                            attempt, burned))
+                        if isinstance(exc, catch):
+                            error = exc
+                            break
+                        raise
+                if error is not None:
                     break
-            return DispatchResult(records=recs, wall_s=0.0, error=error)
+            return DispatchResult(records=recs, wall_s=0.0, error=error,
+                                  faults=tuple(faults))
 
         t0 = time.perf_counter()
         timed = executor.map_timed(run_platform, plan)
@@ -325,16 +405,22 @@ class Scheduler:
         return results, wall_s
 
     def execute(self, allocation: Allocation, quality=None, seed: int = 3,
-                mode: str | None = None) -> RuntimeReport:
+                mode: str | None = None,
+                retry: RetryPolicy | None = None) -> RuntimeReport:
         """Dispatch each platform's launch groups; concurrent by default.
 
         Records are collected in platform-major order — identical to the
-        sequential loop's (see :meth:`dispatch_plan`)."""
+        sequential loop's (see :meth:`dispatch_plan`). ``retry`` arms the
+        fault layer: handled faults land in ``report.fault_events`` and
+        their burned virtual time inflates the faulty platform's latency
+        (a storm honestly costs makespan)."""
         problem = self.problem(quality)
         shards = self.shards(allocation, problem)
-        results, wall_s = self.dispatch_plan(shards, seed=seed, mode=mode)
+        results, wall_s = self.dispatch_plan(shards, seed=seed, mode=mode,
+                                             retry=retry)
 
         records: list[RunRecordLike] = []
+        fault_events: list[FaultEvent] = []
         plat_lat = {self.domain.platform_name(p): 0.0 for p in self.platforms}
         plat_wall: dict[str, float] = {}
         for (p, _groups), result in zip(shards, results):
@@ -343,6 +429,9 @@ class Scheduler:
             for rec in result.records:
                 records.append(rec)
                 plat_lat[pname] += rec.latency
+            for ev in result.faults:
+                fault_events.append(ev)
+                plat_lat[pname] += ev.latency
         return RuntimeReport(
             allocation=allocation,
             predicted_makespan=makespan(allocation.A, problem),
@@ -353,6 +442,7 @@ class Scheduler:
             platform_wall_s=plat_wall,
             wall_s=wall_s,
             mode=self._executor(mode).mode,
+            fault_events=fault_events,
         )
 
     # -- convenience: the whole Fig. 1 flow --------------------------------

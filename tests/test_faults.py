@@ -1,0 +1,587 @@
+"""Fault-tolerant runtime: taxonomy + retry/backoff, executor failure
+isolation, circuit-breaker recovery, and graceful degradation.
+
+Three tiers:
+
+* **Unit** — ``check_records`` sanity splitting, ``RetryPolicy``
+  determinism, the ``CircuitBreaker`` state machine, executor
+  timeout/cancel/error semantics, ``salvage_runs``, and the scenario-level
+  flaky/corrupt injection physics.
+* **Acceptance** — the canonical fault storm (flaky Desktop + finite GPU
+  outage + corrupt FPGA window) on the pricing workload: with the fault
+  layer armed every task still prices to target and the dead platform is
+  re-admitted through OPEN -> HALF_OPEN -> CLOSED; without the layer the
+  same storm kills the run. Deadline-pressure degradation trades accuracy
+  for latency on cue, and an LM outage+recovery cycle stays within KV
+  budgets.
+* **Property** (hypothesis; profile in pyproject.toml, registered by
+  conftest.py) — randomized storms asserting (a) every task completes to
+  its (possibly degraded) quality target or is in the degradation log,
+  (b) concurrent == sequential records bitwise under faults, and (c) no
+  KV oversubscription across an outage/recovery cycle.
+"""
+import dataclasses
+import math
+import threading
+import time
+
+import pytest
+
+from repro.runtime import (
+    CircuitBreaker,
+    CorruptResult,
+    DispatchTimeout,
+    Executor,
+    FaultEvent,
+    JobCancelled,
+    OnlineConfig,
+    OnlineScheduler,
+    PlatformOutage,
+    PlatformSpec,
+    RetryPolicy,
+    Scenario,
+    Scheduler,
+    TransientFault,
+    check_records,
+    dump_records,
+    load_records,
+    make_domain,
+)
+from repro.runtime.faults import CLOSED, HALF_OPEN, OPEN, count_retries, fault_kind
+from repro.runtime.scenario import apply_scenario, salvage_runs
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic tiers still run
+    HAVE_HYPOTHESIS = False
+
+LADDER = (512, 2048, 8192)
+ROWS = (0, 9, 14)  # Desktop, Local GPU 1, Local FPGA 1
+QUALITY = 0.05
+#: no-fault online makespan of the 6-task instance below (rounds=6, milp);
+#: re-measured by test_storm_recovery_completes_all_tasks rather than
+#: trusted, but documented here for the storm-cost assertions.
+BASELINE_MAKESPAN = 0.083
+
+
+def _tasks(n=3):
+    from repro.pricing import table1_workload
+
+    return table1_workload(seed=12, n_steps=8,
+                           categories=[("BS-A", n), ("H-A", n)])
+
+
+#: shared across tests: the moments cache is a pure function of the task
+#: set, and rebuilding its 4096-path calibration per test dominates runtime
+_MOMENTS = None
+
+
+def _fresh(scenario=None, tasks=None):
+    """A characterised scheduler on fresh simulated platforms (clocks and
+    re-fit state are per-run, so A/B legs must not share platforms)."""
+    global _MOMENTS
+    from repro.pricing import SimulatedPlatform, TABLE2_SPECS
+    from repro.pricing.platforms import _TaskMoments
+
+    if _MOMENTS is None:
+        _MOMENTS = _TaskMoments(calib_paths=4096)
+    platforms = [SimulatedPlatform(TABLE2_SPECS[i], moments=_MOMENTS, seed=7)
+                 for i in ROWS]
+    sched = Scheduler(make_domain("pricing", list(tasks or _tasks()), platforms))
+    sched.characterise(seed=1, path_ladder=LADDER)
+    if scenario is not None:
+        for p in platforms:
+            p.attach_scenario(scenario)
+    return sched
+
+
+def _storm():
+    """The canonical three-kind fault storm over the three platforms."""
+    return (Scenario()
+            .flaky("Desktop", p=0.2, seed=5, t=0.0, end=0.03)
+            .outage("Local GPU 1", t=0.01, end=0.05)
+            .corrupt("Local FPGA 1", t=0.015, end=0.02))
+
+
+def _storm_cfg(**kw):
+    kw.setdefault("rounds", 6)
+    kw.setdefault("breaker_cooldown", 0.02)
+    kw.setdefault("retry", RetryPolicy(max_attempts=3, budget=8))
+    return OnlineConfig(**kw)
+
+
+# ---------------------------------------------------------------- unit tier
+
+@dataclasses.dataclass(frozen=True)
+class _Rec:
+    platform: str
+    task_id: int
+    latency: float
+    price: float = 0.0
+
+
+def test_check_records_passes_sane_batch():
+    # a negative price is a legitimate estimate (deep OTM noise), not
+    # corruption; only non-finite fields and non-positive latency are
+    check_records([_Rec("p", 0, 0.5), _Rec("p", 1, 1e-9, price=-0.2)])
+
+
+def test_check_records_splits_good_from_bad():
+    good = [_Rec("p", 0, 0.5), _Rec("p", 3, 0.1)]
+    bad = [_Rec("p", 1, -0.5),            # negated latency (corrupt window)
+           _Rec("p", 2, 0.5, math.nan),   # NaN field
+           _Rec("p", 4, math.inf)]        # non-finite latency
+    with pytest.raises(CorruptResult) as ei:
+        check_records([good[0], bad[0], bad[1], good[1], bad[2]])
+    assert ei.value.records == good
+    assert ei.value.bad == bad
+    assert isinstance(ei.value, CorruptResult) and fault_kind(ei.value) == "corrupt"
+
+
+def test_retry_policy_validation_and_retryable():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="budget"):
+        RetryPolicy(budget=-1)
+    pol = RetryPolicy()
+    assert pol.retryable(TransientFault("x"))
+    assert pol.retryable(CorruptResult("x"))
+    assert pol.retryable(DispatchTimeout("x"))     # a transient
+    assert not pol.retryable(PlatformOutage("x"))  # the breaker's business
+    assert not pol.retryable(ValueError("x"))
+
+
+def test_retry_delay_deterministic_and_capped():
+    pol = RetryPolicy(backoff_base_s=0.01, backoff_cap_s=0.04, jitter=0.1)
+    delays = [pol.delay(3, "Desktop", 2, k) for k in range(1, 6)]
+    # pure function of its coordinates: replaying gives the same schedule
+    assert delays == [pol.delay(3, "Desktop", 2, k) for k in range(1, 6)]
+    for k, d in enumerate(delays, start=1):
+        base = min(0.01 * 2.0 ** (k - 1), 0.04)
+        assert base * 0.9 <= d <= base * 1.1
+    assert max(delays) <= 0.04 * 1.1  # capped, jitter included
+    # zero base disables backoff entirely (the virtual-time default)
+    assert RetryPolicy().delay(3, "Desktop", 2, 1) == 0.0
+
+
+def test_circuit_breaker_full_recovery_cycle():
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=1.0)
+    assert br.state("gpu") == CLOSED and br.available("gpu")
+    assert br.record_failure("gpu", now=0.1) == CLOSED  # streak 1 of 2
+    assert br.record_failure("gpu", now=0.2) == OPEN
+    assert not br.available("gpu") and br.open_platforms() == ("gpu",)
+    assert br.poll("gpu", now=0.5) == OPEN          # cooldown not elapsed
+    assert br.poll("gpu", now=1.3) == HALF_OPEN     # 1.3 >= 0.2 + 1.0
+    assert not br.available("gpu")                  # probes only, no work
+    assert br.record_failure("gpu", now=1.4) == OPEN  # probe failed
+    assert br.poll("gpu", now=2.5) == HALF_OPEN
+    assert br.record_success("gpu", now=2.6) == CLOSED
+    assert br.available("gpu") and br.open_platforms() == ()
+    assert [(t.frm, t.to) for t in br.transitions] == [
+        (CLOSED, OPEN), (OPEN, HALF_OPEN), (HALF_OPEN, OPEN),
+        (OPEN, HALF_OPEN), (HALF_OPEN, CLOSED)]
+    with pytest.raises(ValueError, match="failure_threshold"):
+        CircuitBreaker(failure_threshold=0)
+
+
+def test_circuit_breaker_streak_resets():
+    br = CircuitBreaker(failure_threshold=2)
+    br.record_failure("a", 0.0)
+    br.record_success("a", 0.1)   # a clean round clears the streak
+    br.record_failure("a", 0.2)
+    br.reset_streak("a")          # an idle round does too
+    br.record_failure("a", 0.3)
+    assert br.state("a") == CLOSED  # never two *consecutive* failures
+    br.record_failure("a", 0.4)
+    assert br.state("a") == OPEN
+
+
+def test_fault_event_records_roundtrip_jsonl(tmp_path):
+    from repro.runtime.faults import BreakerTransition, DegradationEvent
+
+    events = [
+        FaultEvent("Desktop", -1, 2, "transient", "retried", 1, 0.0011),
+        DegradationEvent(3, 1, 0.05, 0.1, 1, "deadline"),
+        BreakerTransition("gpu", OPEN, HALF_OPEN, at=0.25, round=4),
+    ]
+    path = tmp_path / "faults.jsonl"
+    assert dump_records(events, path) == 3
+    assert load_records(path) == events
+
+
+# ------------------------------------------------- executor fault semantics
+
+def _boom(x):
+    if x % 2:
+        raise TransientFault(f"boom {x}")
+    return x * 10
+
+
+@pytest.mark.parametrize("mode", ["concurrent", "sequential"])
+def test_executor_isolates_per_job_errors(mode):
+    out = Executor(mode=mode).map_timed(_boom, [0, 1, 2, 3], raise_errors=False)
+    assert [r.value for r in out] == [0, None, 20, None]  # input order
+    assert [r.ok for r in out] == [True, False, True, False]
+    assert all(isinstance(r.error, TransientFault) for r in out if not r.ok)
+
+
+@pytest.mark.parametrize("mode", ["concurrent", "sequential"])
+def test_executor_raise_errors_runs_all_jobs_first(mode):
+    ran, lock = [], threading.Lock()
+
+    def fn(x):
+        with lock:
+            ran.append(x)
+        if x in (1, 2):
+            raise TransientFault(f"boom {x}")
+        return x
+
+    with pytest.raises(TransientFault, match="boom 1"):  # first in input order
+        Executor(mode=mode).map_timed(fn, [0, 1, 2, 3])
+    assert sorted(ran) == [0, 1, 2, 3]  # siblings were not discarded
+
+
+def test_executor_timeout_concurrent_abandons_straggler():
+    def fn(x):
+        time.sleep(x)
+        return x
+
+    out = Executor(mode="concurrent").map_timed(
+        fn, [0.0, 0.8], raise_errors=False, timeout_s=0.15)
+    assert out[0].ok and out[0].value == 0.0
+    assert isinstance(out[1].error, DispatchTimeout)
+
+
+def test_executor_timeout_sequential_flags_post_hoc():
+    out = Executor(mode="sequential").map_timed(
+        lambda x: time.sleep(x) or x, [0.2], raise_errors=False, timeout_s=0.05)
+    assert isinstance(out[0].error, DispatchTimeout)
+    assert out[0].wall_s > 0.05  # the job ran to completion, then was flagged
+
+
+def test_executor_cancel_skips_unstarted_jobs():
+    cancel = threading.Event()
+    cancel.set()
+    out = Executor(mode="sequential").map_timed(
+        lambda x: x, [1, 2], raise_errors=False, cancel=cancel)
+    assert all(isinstance(r.error, JobCancelled) for r in out)
+
+
+# ------------------------------------------------------- salvage + scenario
+
+@pytest.mark.parametrize("exc_type", [TransientFault, PlatformOutage])
+def test_salvage_runs_attaches_partial_output(exc_type):
+    def run_one(x):
+        if x == 2:
+            raise exc_type("fault on 2")
+        return x * 10
+
+    with pytest.raises(exc_type) as ei:
+        salvage_runs(run_one, [0, 1, 2, 3])
+    assert ei.value.records == [0, 10]  # completed before the fault
+
+
+class _FakeSpec:
+    def __init__(self, name, rtt_ms=1.0):
+        self.name, self.rtt_ms = name, rtt_ms
+
+
+class _FakePlat:
+    def __init__(self, name, scenario, rtt_ms=1.0):
+        self.spec = _FakeSpec(name, rtt_ms)
+        self.scenario = scenario
+        self.clock = 0.0
+
+
+def test_scenario_flaky_storm_is_finite_and_deterministic():
+    sc = Scenario().flaky("p", p=1.0, t=0.0, end=0.0035)
+    plat = _FakePlat("p", sc)
+    fails = 0
+    while True:
+        try:
+            lat = apply_scenario(plat, 0.01)
+            break
+        except TransientFault:
+            fails += 1
+            assert fails < 100, "finite flaky window never ended"
+    # p=1.0 fails every draw inside the window; each failure burns one
+    # retry cost (1 ms here) until the clock escapes at 0.0035
+    assert fails == 4 and lat == pytest.approx(0.01)
+    assert plat.clock == pytest.approx(4e-3 + 0.01)
+    # pure in (seed, platform, clock): a replay sees the identical storm
+    replay = _FakePlat("p", Scenario().flaky("p", p=1.0, t=0.0, end=0.0035))
+    refails = 0
+    while True:
+        try:
+            apply_scenario(replay, 0.01)
+            break
+        except TransientFault:
+            refails += 1
+    assert refails == fails and replay.clock == plat.clock
+    with pytest.raises(ValueError, match="probability"):
+        Scenario().flaky("p", p=1.5)
+
+
+def test_scenario_flaky_p_zero_never_fires():
+    plat = _FakePlat("p", Scenario().flaky("p", p=0.0))
+    for _ in range(20):
+        assert apply_scenario(plat, 0.01) == pytest.approx(0.01)
+
+
+def test_scenario_corrupt_negates_latency_but_charges_clock():
+    sc = Scenario().corrupt("p", t=0.0, end=0.015)
+    plat = _FakePlat("p", sc)
+    assert apply_scenario(plat, 0.01) == pytest.approx(-0.01)  # poisoned
+    assert plat.clock == pytest.approx(0.01)     # the work still ran
+    assert apply_scenario(plat, 0.01) == pytest.approx(-0.01)  # still inside
+    assert apply_scenario(plat, 0.01) == pytest.approx(0.01)   # escaped
+    with pytest.raises(CorruptResult):
+        check_records([_Rec("p", 0, -0.01)])     # what dispatchers see
+
+
+# -------------------------------------------------- dispatch-level retries
+
+def test_execute_retries_through_flaky_window():
+    sc = Scenario().flaky("Desktop", p=1.0, t=0.0, end=0.003)
+    sched = _fresh(sc)
+    alloc = sched.allocate(QUALITY, method="milp", time_limit=20)
+    rep = sched.execute(alloc, QUALITY,
+                        retry=RetryPolicy(max_attempts=6, budget=8))
+    assert {r.task_id for r in rep.records} == {t.task_id for t in sched.tasks}
+    retried = [e for e in rep.fault_events if e.action == "retried"]
+    assert retried and all(e.fault == "transient" for e in retried)
+    assert 1 <= count_retries(rep.fault_events) <= 8
+    # the burned retry costs are charged to the flaky platform's latency
+    assert rep.platform_latencies["Desktop"] > sum(
+        r.latency for r in rep.records if r.platform == "Desktop")
+
+
+def test_execute_retry_budget_bounds_infinite_storm():
+    sc = Scenario().flaky("Desktop", p=1.0, t=0.0)  # never ends
+    sched = _fresh(sc)
+    alloc = sched.allocate(QUALITY, method="milp", time_limit=20)
+    with pytest.raises(TransientFault):  # exhausted, not spinning forever
+        sched.execute(alloc, QUALITY, retry=RetryPolicy(max_attempts=3, budget=4))
+
+
+def test_execute_discards_corrupt_records_and_redispatches():
+    sc = Scenario().corrupt("Local FPGA 1", t=0.0, end=0.004)
+    sched = _fresh(sc)
+    alloc = sched.allocate(QUALITY, method="milp", time_limit=20)
+    rep = sched.execute(alloc, QUALITY, retry=RetryPolicy(max_attempts=6, budget=8))
+    assert all(r.latency > 0 for r in rep.records)  # no poison in the output
+    assert any(e.fault == "corrupt" and e.action == "retried"
+               for e in rep.fault_events)
+    assert {r.task_id for r in rep.records} == {t.task_id for t in sched.tasks}
+
+
+# --------------------------------------------------------- acceptance tier
+
+def test_storm_recovery_completes_all_tasks():
+    """The canonical storm: transient blips retried, the GPU outage opens
+    its breaker and a cooldown later a probe re-admits it, corrupt records
+    are discarded — and every task still prices to target."""
+    base = OnlineScheduler(_fresh(), OnlineConfig(rounds=6)).run(
+        QUALITY, method="milp", seed=3, time_limit=20)
+    rep = OnlineScheduler(_fresh(_storm()), _storm_cfg()).run(
+        QUALITY, method="milp", seed=3, time_limit=20)
+
+    assert rep.dead_platforms == ()
+    assert rep.recovered_platforms == ("Local GPU 1",)
+    assert rep.n_probes >= 1
+    assert 1 <= rep.n_retries <= 8  # bounded by the policy budget
+    gpu = [(t.frm, t.to) for t in rep.breaker_transitions
+           if t.platform == "Local GPU 1"]
+    assert gpu == [(CLOSED, OPEN), (OPEN, HALF_OPEN), (HALF_OPEN, CLOSED)]
+    assert any(r.revived == ("Local GPU 1",) for r in rep.rounds)
+    kinds = {e.fault for e in rep.fault_events}
+    assert {"transient", "outage", "corrupt"} <= kinds
+    # every task priced to the *undegraded* target despite the storm
+    for t in _tasks():
+        assert rep.summary["measured_ci"][t.task_id] <= QUALITY * 1.25
+    # the storm costs makespan (burned retries, stranded GPU work re-run
+    # elsewhere) but bounded: within 2x of the fault-free run
+    assert base.measured_makespan < rep.measured_makespan
+    assert rep.measured_makespan <= 2.0 * base.measured_makespan
+
+
+def test_storm_without_fault_layer_kills_the_run():
+    """The same storm against the legacy loop (no retry policy): the first
+    transient blip is unhandled and the workload dies — the demonstrable
+    failure the fault layer exists to prevent."""
+    with pytest.raises(TransientFault):
+        OnlineScheduler(_fresh(_storm()), OnlineConfig(rounds=6)).run(
+            QUALITY, method="milp", seed=3, time_limit=20)
+
+
+def test_storm_mode_parity():
+    """Concurrent and sequential dispatch see the identical storm: same
+    records (bitwise), same fault log, same breaker history."""
+    runs = {}
+    for mode in ("concurrent", "sequential"):
+        runs[mode] = OnlineScheduler(_fresh(_storm()), _storm_cfg()).run(
+            QUALITY, method="milp", seed=3, time_limit=20, mode=mode)
+    conc, seq = runs["concurrent"], runs["sequential"]
+    assert conc.records == seq.records
+    assert conc.measured_makespan == seq.measured_makespan
+    assert conc.fault_events == seq.fault_events
+    assert conc.breaker_transitions == seq.breaker_transitions
+    assert conc.recovered_platforms == seq.recovered_platforms
+
+
+def test_deadline_pressure_degrades_quality_on_cue():
+    """An unmeetable deadline walks every task one rung down the
+    degradation ladder (pricing: a looser CI target) and the run then
+    finishes inside the deadline instead of blowing it."""
+    sched = _fresh()
+    predicted = sched.allocate(QUALITY, method="milp", time_limit=20).makespan
+    cfg = OnlineConfig(rounds=6, deadline_s=predicted * 0.5,
+                       degrade_steps=(1.0, 3.0))
+    rep = OnlineScheduler(_fresh(), cfg).run(
+        QUALITY, method="milp", seed=3, time_limit=20)
+    assert rep.degradations, "deadline pressure never degraded"
+    assert all(d.reason == "deadline" for d in rep.degradations)
+    degraded = {d.task_id: d.quality_to for d in rep.degradations}
+    assert degraded.keys() == {t.task_id for t in _tasks()}
+    for tid, target in degraded.items():
+        assert target == pytest.approx(QUALITY * 2.0)  # rung 1: step 1.0
+        assert rep.summary["measured_ci"][tid] <= target * 1.25
+    assert rep.measured_makespan <= cfg.deadline_s
+
+
+def _lm_fleet():
+    from repro.domains.lm_serving import (
+        LMRequest, SimulatedLMPlatform, kv_bytes_per_token,
+    )
+
+    reqs = [LMRequest("qwen25_3b", prompt_len=8, gen_tokens=32 + 4 * i,
+                      batch=2, max_new_tokens=64, task_id=i)
+            for i in range(8)]
+    per = kv_bytes_per_token(reqs[0].config(), reqs[0].batch)
+    total_kv = per * sum(r.gen_tokens for r in reqs)
+    specs = [
+        PlatformSpec("Fast", "GPU", "sim", "loc", 400.0, 1.0,
+                     mem_bytes=total_kv * 0.35),
+        PlatformSpec("Steady A", "CPU", "sim", "loc", 40.0, 1.0,
+                     mem_bytes=total_kv * 2),
+        PlatformSpec("Steady B", "CPU", "sim", "loc", 40.0, 1.0,
+                     mem_bytes=total_kv * 2),
+    ]
+    fleet = [SimulatedLMPlatform(s, seed=0) for s in specs]
+    sched = Scheduler(make_domain("lm_serving", reqs, fleet))
+    sched.characterise(seed=1, token_ladder=(2, 4, 8, 16))
+    return sched, fleet, reqs, specs, per
+
+
+def _assert_no_kv_oversubscription(rep, specs, per):
+    # tasks complete only at the end of the run, so everything served on a
+    # platform was resident together (couple of tokens of ceil rounding ok)
+    held = {s.name: 0.0 for s in specs}
+    for rec in rep.records:
+        held[rec.platform] += per * rec.n_tokens
+    for s in specs:
+        assert held[s.name] <= s.mem_bytes * 1.02 + 2 * per, \
+            (s.name, held[s.name], s.mem_bytes)
+
+
+def test_lm_outage_recovery_respects_kv_budgets():
+    """A capacity-constrained fleet loses its fast platform, re-solves
+    without it, re-admits it after a probe — and at no point does the
+    re-shuffled plan oversubscribe anyone's KV budget."""
+    sched, fleet, reqs, specs, per = _lm_fleet()
+    m0 = sched.allocate(method="milp", time_limit=20).makespan
+    scenario = Scenario().outage("Fast", t=0.0, end=0.002)
+    for p in fleet:
+        p.attach_scenario(scenario)
+    cfg = OnlineConfig(rounds=6, gamma_duty=0.0, breaker_cooldown=m0 * 0.3,
+                       retry=RetryPolicy())
+    rep = OnlineScheduler(sched, cfg).run(method="milp", seed=3, time_limit=20)
+    assert rep.recovered_platforms == ("Fast",)
+    assert [(t.frm, t.to) for t in rep.breaker_transitions
+            if t.platform == "Fast"] == [
+        (CLOSED, OPEN), (OPEN, HALF_OPEN), (HALF_OPEN, CLOSED)]
+    for req in reqs:
+        assert rep.summary["tokens"][req.task_id] >= req.gen_tokens
+    _assert_no_kv_oversubscription(rep, specs, per)
+
+
+# ----------------------------------------------------------- property tier
+
+if HAVE_HYPOTHESIS:
+
+    def _small_storm_run(p_flaky, seed, mode="concurrent", deadline_frac=None):
+        """One 4-task online run under a randomized (but escape-proof)
+        storm: the flaky window spans at most 10 retry costs and the
+        policy budget exceeds that, so completion is guaranteed."""
+        storm = (Scenario()
+                 .flaky("Desktop", p=p_flaky, seed=seed, t=0.0, end=0.01)
+                 .corrupt("Local FPGA 1", t=0.0, end=0.002)
+                 .outage("Local GPU 1", t=0.005, end=0.02))
+        sched = _fresh(storm, tasks=_tasks(n=2))
+        deadline = None
+        if deadline_frac is not None:
+            deadline = sched.allocate(QUALITY, method="heuristic").makespan \
+                * deadline_frac
+        cfg = OnlineConfig(rounds=4, breaker_cooldown=0.01,
+                           retry=RetryPolicy(max_attempts=12, budget=32),
+                           degrade_steps=(1.0, 3.0), deadline_s=deadline)
+        return OnlineScheduler(sched, cfg).run(
+            QUALITY, method="heuristic", seed=3, mode=mode)
+
+    @given(p_flaky=st.floats(0.0, 1.0), seed=st.integers(0, 10**6),
+           deadline_frac=st.one_of(st.none(), st.floats(0.3, 1.5)))
+    @settings(deadline=None)
+    def test_property_tasks_complete_to_target_or_are_logged_degraded(
+            p_flaky, seed, deadline_frac):
+        """Invariant (a): under any escape-proof storm, every task either
+        prices to the full quality target or every relaxation it received
+        is in the degradation log — no silent accuracy loss."""
+        rep = _small_storm_run(p_flaky, seed, deadline_frac=deadline_frac)
+        degraded = {}
+        for d in rep.degradations:
+            degraded[d.task_id] = max(degraded.get(d.task_id, 0.0), d.quality_to)
+        for t in _tasks(n=2):
+            target = degraded.get(t.task_id, QUALITY)
+            assert rep.summary["measured_ci"][t.task_id] <= target * 1.3, \
+                (t.task_id, rep.summary["measured_ci"][t.task_id], target)
+
+    @given(p_flaky=st.floats(0.0, 1.0), seed=st.integers(0, 10**6))
+    @settings(deadline=None)
+    def test_property_mode_parity_under_faults(p_flaky, seed):
+        """Invariant (b): records, fault log and breaker history are
+        bitwise identical across executor modes for any storm."""
+        conc = _small_storm_run(p_flaky, seed, mode="concurrent")
+        seq = _small_storm_run(p_flaky, seed, mode="sequential")
+        assert conc.records == seq.records
+        assert conc.fault_events == seq.fault_events
+        assert conc.breaker_transitions == seq.breaker_transitions
+        assert conc.degradations == seq.degradations
+        assert conc.measured_makespan == seq.measured_makespan
+
+    @given(end_frac=st.floats(0.1, 1.0), cool_frac=st.floats(0.05, 1.0))
+    @settings(deadline=None, max_examples=10)  # LM characterise dominates
+    def test_property_no_kv_oversubscription_across_recovery(
+            end_frac, cool_frac):
+        """Invariant (c): however the outage window and breaker cooldown
+        land relative to the workload, the re-shuffled plans never
+        oversubscribe a platform's KV budget."""
+        sched, fleet, reqs, specs, per = _lm_fleet()
+        m0 = sched.allocate(method="milp", time_limit=20).makespan
+        scenario = Scenario().outage("Fast", t=0.0, end=m0 * end_frac)
+        for p in fleet:
+            p.attach_scenario(scenario)
+        cfg = OnlineConfig(rounds=5, gamma_duty=0.0,
+                           breaker_cooldown=m0 * cool_frac,
+                           retry=RetryPolicy())
+        rep = OnlineScheduler(sched, cfg).run(method="milp", seed=3,
+                                              time_limit=20)
+        for req in reqs:
+            assert rep.summary["tokens"][req.task_id] >= req.gen_tokens
+        _assert_no_kv_oversubscription(rep, specs, per)
+
+else:  # pragma: no cover - exercised only without hypothesis
+    @pytest.mark.skip(reason="hypothesis not installed — property tier "
+                             "(storm invariants) skipped")
+    def test_property_tier_requires_hypothesis():
+        ...
