@@ -7,6 +7,8 @@ Public API:
     Allocation (§3.2/§4.3): AllocationProblem, Allocation, makespan,
         proportional_allocation (eq. 11), ml_allocation (SA + LP polish),
         milp_allocation (eq. 12 via HiGHS)
+    Scale: cluster_tasks / clustered_allocation (task-family super-tasks),
+        patch_allocation (O(k) incremental re-solve for k arrivals)
     Synthetic characterisation (§6.1): synthetic.generate / TABLE3_CASES
     Pareto surfaces (§3.2.3): pareto.sweep / platform_curves
 """
@@ -28,7 +30,9 @@ from .allocation import (  # noqa: F401
     restrict_problem,
 )
 from .annealing import anneal, lp_polish, ml_allocation  # noqa: F401
+from .clustering import ClusterPlan, cluster_tasks, clustered_allocation  # noqa: F401
 from .heuristic import proportional_allocation  # noqa: F401
+from .incremental import patch_allocation  # noqa: F401
 from .metrics import (  # noqa: F401
     AccuracyModel,
     CombinedModel,

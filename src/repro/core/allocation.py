@@ -152,6 +152,10 @@ class AllocationProblem:
         object.__setattr__(self, "offsets", offsets)
         object.__setattr__(self, "resource", resource)
         object.__setattr__(self, "capacity", capacity)
+        # capacity-feasibility verdict cache: None = not yet established.
+        # Instances are frozen, so a verdict can never go stale; every solver
+        # calls assert_capacity_feasible and only the first should pay the LP.
+        object.__setattr__(self, "_cap_feasible", None)
 
     @property
     def has_capacity(self) -> bool:
@@ -235,19 +239,42 @@ def assert_capacity_feasible(problem: AllocationProblem) -> None:
     Shared pre-check of all three solvers (heuristic, ML, MILP) so an
     infeasible instance produces the *same* typed error from every one of
     them. Feasibility of {A >= 0, columns sum to 1, (R o A).1 <= capacity}
-    is a small transportation LP; a cheap necessary condition (even each
-    task's cheapest placement exceeds the summed capacity) short-circuits
-    the common aggregate-infeasible case with a precise message.
+    is a small transportation LP, but most instances never need it: the
+    verdict is cached on the (frozen) problem, an unbounded platform or a
+    greedy cheapest-placement that fits proves feasibility outright, and a
+    cheap necessary condition (even each task's cheapest placement exceeds
+    the summed capacity) short-circuits the aggregate-infeasible case with
+    a precise message. The LP runs only when every cheap test is
+    inconclusive.
     """
     if not problem.has_capacity:
         return
+    verdict = getattr(problem, "_cap_feasible", None)
+    if verdict is True:
+        return
+    if isinstance(verdict, CapacityError):
+        raise verdict
     R, cap = problem.resource, problem.capacity
     best_case = R.min(axis=0).sum()  # every task on its cheapest platform
     total_cap = cap.sum()
     if best_case > total_cap * (1 + CAPACITY_RTOL):
-        raise CapacityError(
+        err = CapacityError(
             f"workload needs >= {best_case:.6g} resource units even on each "
             f"task's cheapest platform, but the fleet holds {total_cap:.6g}")
+        object.__setattr__(problem, "_cap_feasible", err)
+        raise err
+    # sufficient checks, cheapest first: any unbounded platform can absorb
+    # the whole workload; otherwise try placing each task wholly on its
+    # cheapest platform and see whether that already fits the budgets.
+    if np.isinf(cap).any():
+        object.__setattr__(problem, "_cap_feasible", True)
+        return
+    cheapest = R.argmin(axis=0)
+    usage = np.bincount(cheapest, weights=R[cheapest, np.arange(problem.tau)],
+                        minlength=problem.mu)
+    if (usage <= cap * (1 + CAPACITY_RTOL)).all():
+        object.__setattr__(problem, "_cap_feasible", True)
+        return
     # exact check: feasibility LP over the shares (HiGHS, mu*tau variables;
     # only the finite capacity rows can ever bind)
     from scipy.optimize import linprog
@@ -265,10 +292,13 @@ def assert_capacity_feasible(problem: AllocationProblem) -> None:
     res = linprog(np.zeros(n), A_ub=A_ub, b_ub=cap[finite], A_eq=A_eq,
                   b_eq=np.ones(tau), bounds=(0, 1), method="highs")
     if not res.success:
-        raise CapacityError(
+        err = CapacityError(
             "no allocation satisfies the per-platform capacities "
             f"(capacity={np.array2string(cap, precision=4)}; LP status "
             f"{res.status}: {res.message})")
+        object.__setattr__(problem, "_cap_feasible", err)
+        raise err
+    object.__setattr__(problem, "_cap_feasible", True)
 
 
 # -- sub-problems over remaining work (online re-allocation) -----------------
@@ -311,9 +341,31 @@ def restrict_problem(
     cols = np.arange(problem.tau) if tasks is None else np.asarray(tasks, dtype=int)
     if rows.size == 0 or cols.size == 0:
         raise ValueError("restricted problem needs >= 1 platform and >= 1 task")
-    delta = problem.delta[np.ix_(rows, cols)]
-    resource = (None if problem.resource is None
-                else problem.resource[np.ix_(rows, cols)])
+    # Avoid np.ix_ fancy-indexing copies where a cheaper path exists: a
+    # full-frame restriction (rows and cols both identity) reuses the parent
+    # arrays outright, and restricting only one axis copies O(kept) rather
+    # than materialising the index product. Matters for the O(k) incremental
+    # re-solve path, where cols is k << tau.
+    rows_all = platforms is None or (
+        rows.size == problem.mu and rows[0] == 0 and rows[-1] == problem.mu - 1
+        and np.array_equal(rows, np.arange(problem.mu)))
+    cols_all = tasks is None or (
+        cols.size == problem.tau and cols[0] == 0 and cols[-1] == problem.tau - 1
+        and np.array_equal(cols, np.arange(problem.tau)))
+
+    def _take(M):
+        if M is None:
+            return None
+        if rows_all and cols_all:
+            return M
+        if cols_all:
+            return M[rows]
+        if rows_all:
+            return M[:, cols]
+        return M[np.ix_(rows, cols)]
+
+    delta = _take(problem.delta)
+    resource = _take(problem.resource)
     if remaining is not None:
         r = np.asarray(remaining, dtype=np.float64)
         if r.shape != (cols.size,):
@@ -327,11 +379,12 @@ def restrict_problem(
     if capacity is not None and problem.resource is None:
         raise ValueError("capacity override needs a problem with a resource matrix")
     cap = problem.capacity if capacity is None else np.asarray(capacity, dtype=np.float64)
-    return AllocationProblem(delta=delta, gamma=problem.gamma[np.ix_(rows, cols)],
-                             c=problem.c[cols], reduction=problem.reduction,
-                             offsets=off[rows],
+    return AllocationProblem(delta=delta, gamma=_take(problem.gamma),
+                             c=problem.c if cols_all else problem.c[cols],
+                             reduction=problem.reduction,
+                             offsets=off if rows_all else off[rows],
                              resource=resource,
-                             capacity=None if cap is None else cap[rows])
+                             capacity=cap if cap is None or rows_all else cap[rows])
 
 
 def restrict_allocation(A: np.ndarray, platforms: Sequence[int],

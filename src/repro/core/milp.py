@@ -160,11 +160,16 @@ def milp_allocation(
             return shortcut
     mu, tau = problem.mu, problem.tau
     n = mu * tau
+    t_build0 = time.perf_counter()
     if atomic:
         c, cons, integrality, bounds = _build_atomic(problem)
     else:
         c, cons, integrality, bounds = _build_relaxed(problem)
+    build_s = time.perf_counter() - t_build0
+    n_vars = c.size
+    n_constraints = sum(con.A.shape[0] for con in cons)
 
+    t_solve0 = time.perf_counter()
     res = milp(
         c,
         constraints=cons,
@@ -172,6 +177,9 @@ def milp_allocation(
         bounds=bounds,
         options={"time_limit": time_limit, "mip_rel_gap": mip_rel_gap},
     )
+    phase_meta = {"build_s": build_s,
+                  "solve_s": time.perf_counter() - t_solve0,
+                  "n_vars": int(n_vars), "n_constraints": int(n_constraints)}
     solve_time = time.perf_counter() - t0
 
     if res.x is None:
@@ -181,7 +189,7 @@ def milp_allocation(
             A=heur.A, makespan=heur.makespan, solver="milp",
             solve_time=solve_time, optimal=False,
             meta={"status": int(res.status), "fallback": "heuristic",
-                  **warm_meta},
+                  **phase_meta, **warm_meta},
         )
 
     A = np.asarray(res.x[:n], dtype=np.float64).reshape(mu, tau)
@@ -211,5 +219,5 @@ def milp_allocation(
         bound=None if bound is None else float(bound),
         meta={"status": int(res.status), "mip_gap": None if gap is None else float(gap),
               "node_count": int(getattr(res, "mip_node_count", -1) or -1),
-              **warm_meta},
+              **phase_meta, **warm_meta},
     )

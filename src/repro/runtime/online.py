@@ -56,6 +56,7 @@ from repro.core import (
     CapacityError,
     SUPPORT_ATOL,
     expand_allocation,
+    patch_allocation,
     restrict_allocation,
     restrict_problem,
 )
@@ -133,6 +134,15 @@ class OnlineConfig:
     #: degradation when the surviving fleet cannot meet it. None = no
     #: deadline pressure; CapacityError still triggers the ladder.
     deadline_s: float | None = None
+    #: arrivals-only re-solves (no drift, no deaths, no revivals) take the
+    #: O(k) incremental path: only the k new columns are solved against
+    #: the fleet's committed shares (:func:`repro.core.patch_allocation`),
+    #: and the model re-fit is skipped — nothing about the old tasks'
+    #: evidence changed. False restores the full re-solve on every arrival.
+    patch_arrivals: bool = True
+    #: patched-makespan tolerance vs the fresh full-problem heuristic bound
+    #: before the patch is discarded for a full re-solve.
+    patch_tol: float = 0.25
 
 
 #: effectively-infinite per-unit latency, but small enough that the MILP's
@@ -219,7 +229,9 @@ class RoundLog:
     failed: tuple[str, ...]
     arrivals: int
     resolved: bool
-    #: "solved" | "skipped" (warm-start early exit) | None (no re-solve).
+    #: "solved" | "skipped" (warm-start early exit) | "patched" (O(k)
+    #: incremental arrival patch) | "patch-fallback" (patch discarded for a
+    #: full solve) | None (no re-solve).
     solve_outcome: str | None
     #: platforms whose breaker probe succeeded this round (re-admitted).
     revived: tuple[str, ...] = ()
@@ -254,6 +266,10 @@ class OnlineReport:
     n_retries: int = 0              # retried dispatch attempts, all rounds
     n_probes: int = 0               # breaker recovery probes dispatched
     recovered_platforms: tuple[str, ...] = ()  # died then re-admitted
+    n_patched: int = 0              # arrivals absorbed by the O(k) patch
+    #: solver telemetry per solve that ran (initial + re-solves + patches):
+    #: build_s/solve_s phases, n_vars/n_constraints, incremental outcome.
+    solve_metas: list = dataclasses.field(default_factory=list)
 
     @property
     def makespan_error(self) -> float:
@@ -279,6 +295,11 @@ class OnlineScheduler:
     def __init__(self, scheduler: Scheduler, config: OnlineConfig | None = None):
         self.scheduler = scheduler
         self.config = config or OnlineConfig()
+        # per-pair work totals memo for _solve, keyed on (models_version,
+        # task count, surviving rows, quality bytes): totals only change
+        # when the models or the frame do, yet the O(mu*tau) Python loop
+        # that builds them used to run on every re-solve
+        self._totals_cache: tuple[tuple, dict] | None = None
 
     # -- helpers -----------------------------------------------------------
 
@@ -290,7 +311,8 @@ class OnlineScheduler:
                alive: dict[str, bool], done: dict[int, float],
                incumbent_A: np.ndarray | None,
                elapsed: dict[str, float] | None = None,
-               done_pair: dict[tuple[str, int], float] | None = None):
+               done_pair: dict[tuple[str, int], float] | None = None,
+               patch_tids: set[int] | None = None):
         """(Re-)solve the allocation over the remaining work only.
 
         Returns (allocation, A_full, quotas) — A_full is the sub-solution
@@ -309,6 +331,14 @@ class OnlineScheduler:
         the task completes, so each platform enters the restricted problem
         with only its remaining capacity — a drift-triggered re-solve
         cannot oversubscribe a platform that is part-way through its plan.
+
+        ``patch_tids`` switches to the O(k) incremental path: the columns
+        whose task ids it names are solved by :func:`patch_allocation`
+        against the incumbent's committed shares (held fixed) instead of
+        re-solving the whole restricted problem — the arrivals-only round's
+        fast path, with patch_allocation's own bound test falling back to
+        the full restricted solve when holding the old shares costs more
+        than ``config.patch_tol``.
         """
         domain, sched = self.domain, self.scheduler
         c = sched.quality_vector(quality)
@@ -319,16 +349,26 @@ class OnlineScheduler:
             raise RuntimeError("every platform is down; cannot re-allocate")
         # per-(platform, task) totals and remaining under each platform's
         # own fitted model; a task stays active while any surviving
-        # platform's inversion says work is outstanding
-        totals: dict[tuple[str, int], float] = {}
+        # platform's inversion says work is outstanding. Totals are memoed
+        # on the model generation — only refit/characterise change them.
+        cache_key = (sched.models_version, len(domain.tasks), tuple(rows),
+                     c.tobytes())
+        if self._totals_cache is not None and self._totals_cache[0] == cache_key:
+            totals = self._totals_cache[1]
+        else:
+            totals = {}
+            for j, t in enumerate(domain.tasks):
+                for i in rows:
+                    pname = domain.platform_name(domain.platforms[i])
+                    totals[(pname, t.task_id)] = max(domain.work_units(
+                        sched.models[(pname, t.task_id)], float(c[j])), 1e-12)
+            self._totals_cache = (cache_key, totals)
         frac_by_col: dict[int, float] = {}
         for j, t in enumerate(domain.tasks):
             best = 0.0
             for i in rows:
                 pname = domain.platform_name(domain.platforms[i])
-                total = max(domain.work_units(
-                    sched.models[(pname, t.task_id)], float(c[j])), 1e-12)
-                totals[(pname, t.task_id)] = total
+                total = totals[(pname, t.task_id)]
                 rem = max(total - done.get(t.task_id, 0.0), 0.0)
                 best = max(best, rem / total)
             if best > 0:
@@ -359,11 +399,34 @@ class OnlineScheduler:
         sub = restrict_problem(problem, rows, cols,
                                [frac_by_col[j] for j in cols],
                                offsets=offsets, capacity=cap_rem)
-        kw = dict(solver_kw)
-        if incumbent_A is not None and method in ("milp", "ml"):
-            kw["incumbent"] = restrict_allocation(incumbent_A, rows, cols)
-            kw.setdefault("warm_tol", self.config.warm_tol)
-        alloc = SOLVERS[method](sub, **kw)
+        new_idx = ([] if not patch_tids else
+                   [k for k, j in enumerate(cols)
+                    if domain.tasks[j].task_id in patch_tids])
+        if new_idx and incumbent_A is not None and len(new_idx) < len(cols):
+            # patch base: the incumbent's shares for the columns it has
+            # already committed, exact zeros for the newcomers (they carry
+            # no mass yet — restrict_allocation's uniform orphan fill would
+            # violate patch_allocation's precondition)
+            base = np.asarray(incumbent_A, dtype=np.float64)[
+                np.ix_(rows, cols)].copy()
+            base[:, new_idx] = 0.0
+            colsum = base.sum(axis=0)
+            old = np.ones(len(cols), dtype=bool)
+            old[new_idx] = False
+            orphan = old & (colsum <= SUPPORT_ATOL)
+            if orphan.any():
+                base[:, orphan] = 1.0 / len(rows)
+                colsum = base.sum(axis=0)
+            base[:, old] /= colsum[old]
+            alloc = patch_allocation(sub, base, new_idx, method,
+                                     patch_tol=self.config.patch_tol,
+                                     **solver_kw)
+        else:
+            kw = dict(solver_kw)
+            if incumbent_A is not None and method in ("milp", "ml"):
+                kw["incumbent"] = restrict_allocation(incumbent_A, rows, cols)
+                kw.setdefault("warm_tol", self.config.warm_tol)
+            alloc = SOLVERS[method](sub, **kw)
         A_full = expand_allocation(alloc.A, problem.mu, problem.tau, rows, cols)
         quotas: dict[tuple[str, int], float] = {}
         for i in rows:
@@ -410,7 +473,8 @@ class OnlineScheduler:
                         alive: dict[str, bool], done: dict[int, float],
                         incumbent_A, elapsed=None, done_pair=None,
                         active_tids=None, round_idx: int = -1,
-                        degradations: list | None = None):
+                        degradations: list | None = None,
+                        patch_tids: set[int] | None = None):
         """:meth:`_solve` wrapped in the graceful-degradation ladder.
 
         An infeasible restricted problem (typed :class:`CapacityError` —
@@ -430,7 +494,7 @@ class OnlineScheduler:
                 alloc, A_full, quotas = self._solve(
                     self._effective_quality(quality, rung), method, solver_kw,
                     alive, done, incumbent_A, elapsed=elapsed,
-                    done_pair=done_pair)
+                    done_pair=done_pair, patch_tids=patch_tids)
             except CapacityError:
                 if rung >= len(cfg.degrade_steps):
                     raise
@@ -642,6 +706,8 @@ class OnlineScheduler:
         predicted0 = alloc.makespan
         solve_models = dict(sched.models)
         n_solves, n_resolves, n_skipped, n_refits, n_arrivals = 1, 0, 0, 0, 0
+        n_patched = 0
+        solve_metas: list[dict] = [dict(alloc.meta)]
 
         all_records: list[RunRecordLike] = []
         plat_lat = {pn: 0.0 for pn in alive}
@@ -784,6 +850,10 @@ class OnlineScheduler:
                         key = (domain.platform_name(p), t.task_id)
                         if key not in sched.models:
                             sched.models[key] = _UnreachableModel()
+                # the model table is total again — rebuild the matrices now
+                # (characterise_tasks deferred it); the patch path has no
+                # refit to do this later
+                sched._delta, sched._gamma = sched.model_matrices()
                 for key, recs in sched.characterise_records.items():
                     windows.setdefault(key, deque(recs, maxlen=cfg.refit_window))
                 # incumbent gains zero columns for the newcomers; the
@@ -795,9 +865,19 @@ class OnlineScheduler:
             outcome = None
             resolved = False
             if drifted or newly_dead or arrived or revived:
-                self._heal_unreachable(alive, mode, characterise_kw)
-                self._refit(windows, detector, drifted, alive, solve_models)
-                n_refits += 1
+                # arrivals-only rounds take the O(k) incremental path: no
+                # drift means the old tasks' models are still right, so
+                # the re-fit is skipped and only the k new columns solve —
+                # the committed shares are the patch's fixed base
+                patch_tids = None
+                if (cfg.patch_arrivals and arrived
+                        and not (drifted or newly_dead or revived)):
+                    patch_tids = {t.task_id for t in arrived}
+                else:
+                    self._heal_unreachable(alive, mode, characterise_kw)
+                    self._refit(windows, detector, drifted, alive,
+                                solve_models)
+                    n_refits += 1
                 active_tids = ({tid for (_pn, tid), q in quotas.items()
                                 if q > 0}
                                | {t.task_id for t in arrived})
@@ -811,15 +891,24 @@ class OnlineScheduler:
                     incumbent_A=None if revived else A_full,
                     elapsed=plat_lat,
                     done_pair=done_pair, active_tids=active_tids,
-                    round_idx=round_idx, degradations=degradations)
+                    round_idx=round_idx, degradations=degradations,
+                    patch_tids=patch_tids)
                 dt = time.perf_counter() - solve_t0
                 resolve_wall += dt
                 solve_wall += dt
                 if alloc2 is not None:
                     alloc, A_full, quotas = alloc2, A2, quotas2
-                    outcome = alloc.meta.get("warm_start", "solved")
+                    incr = alloc.meta.get("incremental")
+                    if incr == "patched":
+                        outcome = "patched"
+                        n_patched += 1
+                    elif incr == "full_fallback":
+                        outcome = "patch-fallback"
+                    else:
+                        outcome = alloc.meta.get("warm_start", "solved")
                     resolved = True
                     n_solves += 1
+                    solve_metas.append(dict(alloc.meta))
                     if outcome == "skipped":
                         n_skipped += 1
                     else:
@@ -872,4 +961,6 @@ class OnlineScheduler:
             n_retries=count_retries(fault_events),
             n_probes=n_probes,
             recovered_platforms=tuple(sorted(recovered)),
+            n_patched=n_patched,
+            solve_metas=solve_metas,
         )

@@ -31,6 +31,7 @@ from repro.core import (
     Allocation,
     AllocationProblem,
     SUPPORT_ATOL,
+    clustered_allocation,
     makespan,
     milp_allocation,
     ml_allocation,
@@ -99,6 +100,13 @@ class RuntimeReport:
     degradations: list = dataclasses.field(default_factory=list)
 
     @property
+    def solver_meta(self) -> dict:
+        """Per-phase solver telemetry: build_s / solve_s (/ polish_s),
+        n_vars / n_constraints, and — for clustered solves — how many
+        super-tasks the solver actually saw (clustered_from / n_clusters)."""
+        return dict(self.allocation.meta)
+
+    @property
     def makespan_error(self) -> float:
         if self.measured_makespan == 0:
             # an allocation that dispatched no work has no measurable
@@ -128,6 +136,11 @@ class Scheduler:
         #: characterise pass — the online loop's re-fit windows start from
         #: these, and runtime.records can persist them to JSONL.
         self.characterise_records: dict[tuple[str, int], list[RunRecordLike]] = {}
+        #: bumped whenever the fitted models (and hence the matrices)
+        #: change — characterise, incremental characterise, refit. Lets
+        #: callers cache anything derived from the models (the online
+        #: loop's per-pair work totals) and invalidate exactly on change.
+        self.models_version: int = 0
         self._delta: np.ndarray | None = None
         self._gamma: np.ndarray | None = None
 
@@ -155,6 +168,7 @@ class Scheduler:
         self.models = self.domain.characterise(
             seed=seed, executor=self._executor(mode), record_sink=sink, **kw)
         self.characterise_records = sink
+        self.models_version += 1
         self._delta, self._gamma = self.model_matrices()
 
     def characterise_tasks(self, tasks: Sequence[Any], seed: int = 1,
@@ -178,6 +192,7 @@ class Scheduler:
             **kw)
         self.models.update(fitted)
         self.characterise_records.update(sink)
+        self.models_version += 1
         if platforms is None:
             self._delta, self._gamma = self.model_matrices()
 
@@ -193,6 +208,7 @@ class Scheduler:
         for key, recs in windows.items():
             if recs:
                 self.models[key] = self.domain.fit_models(list(recs))
+        self.models_version += 1
         self._delta, self._gamma = self.model_matrices()
 
     def model_matrices(self) -> tuple[np.ndarray, np.ndarray]:
@@ -258,8 +274,19 @@ class Scheduler:
                                  resource=None if cap is None else cap[0],
                                  capacity=None if cap is None else cap[1])
 
-    def allocate(self, quality=None, method: str = "milp", **solver_kw) -> Allocation:
-        return SOLVERS[method](self.problem(quality), **solver_kw)
+    def allocate(self, quality=None, method: str = "milp", *,
+                 cluster: bool = False, cluster_rtol: float = 0.0,
+                 **solver_kw) -> Allocation:
+        """Solve the allocation; ``cluster=True`` routes through task-family
+        clustering (:func:`repro.core.clustered_allocation`) so fleets with
+        many structurally identical tasks solve at family count, not task
+        count. ``cluster_rtol`` merges near-identical families at bounded
+        relative error."""
+        problem = self.problem(quality)
+        if cluster:
+            return clustered_allocation(problem, method, rtol=cluster_rtol,
+                                        **solver_kw)
+        return SOLVERS[method](problem, **solver_kw)
 
     # -- step 5: execution --------------------------------------------------
 

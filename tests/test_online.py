@@ -282,6 +282,40 @@ def test_streaming_arrival_joins_and_is_served():
     assert rep.summary["measured_ci"][100] <= 0.05 * 1.25
 
 
+def test_streaming_arrival_takes_patch_path():
+    """A pure arrival (no drift, no outage) is placed by the O(k)
+    incremental patch, the round log says so, and the per-solve telemetry
+    rides along in ``solve_metas`` — while the accuracy target still holds."""
+    extra = dataclasses.replace(_tasks()[0], task_id=100)
+    sc = Scenario().arrive(t=0.05, task=extra)
+    sched, _ = _fresh(sc)
+    rep = OnlineScheduler(sched, OnlineConfig(rounds=6)).run(
+        0.05, method="milp", seed=3, scenario=sc, time_limit=20)
+    assert rep.n_patched == 1
+    assert "patched" in [r.solve_outcome for r in rep.rounds]
+    # telemetry satellite: the initial full solve carries phase timings,
+    # the arrival solve is tagged as the incremental patch
+    assert rep.solve_metas[0]["build_s"] >= 0
+    assert rep.solve_metas[0]["solve_s"] >= 0
+    assert any(m.get("incremental") == "patched" for m in rep.solve_metas)
+    assert rep.summary["measured_ci"][100] <= 0.05 * 1.25
+
+
+def test_streaming_arrival_patch_opt_out():
+    """``patch_arrivals=False`` restores the pre-patch behaviour: the
+    arrival is served through a full warm-started re-solve."""
+    extra = dataclasses.replace(_tasks()[0], task_id=100)
+    sc = Scenario().arrive(t=0.05, task=extra)
+    sched, _ = _fresh(sc)
+    rep = OnlineScheduler(
+        sched, OnlineConfig(rounds=6, patch_arrivals=False)).run(
+        0.05, method="milp", seed=3, scenario=sc, time_limit=20)
+    assert rep.n_patched == 0
+    assert not any(r.solve_outcome in ("patched", "patch-fallback")
+                   for r in rep.rounds)
+    assert 100 in rep.summary["prices"]
+
+
 def test_arrival_after_platform_death_served_on_survivors():
     """A task arriving after a platform died must be characterised on the
     survivors only (benchmarking the dead platform would raise) and still

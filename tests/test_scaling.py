@@ -1,0 +1,50 @@
+"""CI fast slice of the scaling bench (ISSUE 7 satellite): the 100x16
+cell for the heuristic and ML solvers, asserted under generous wall-clock
+bars so a scalability regression (accidental densification, a dropped
+vectorisation, an un-warmed JIT in the timed region) fails the non-slow
+leg instead of waiting for the weekly bench sweep.
+
+The full {10,100,1000} x {4,16,64} x {heuristic,ml,milp} sweep stays in
+``benchmarks/allocation_bench.py`` (weekly chaos/bench workflow); this
+module re-uses its cell builder so the test measures exactly what the
+bench measures.
+"""
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.allocation_bench import scaling_cell, scaling_instance  # noqa: E402
+
+from repro.core import cluster_tasks  # noqa: E402
+
+#: generous wall-clock bars (seconds) for the 100x16 cell — an order of
+#: magnitude above observed timings (heuristic ~2ms, ml ~0.3s after JIT
+#: warm-up) so CI machine jitter never flakes, while a complexity-class
+#: regression (e.g. O(tau*mu) -> O((tau*mu)^2)) still trips them.
+SOLVE_BAR_S = {"heuristic": 5.0, "ml": 60.0}
+
+
+def test_scaling_instance_has_family_structure():
+    """The bench instance really is family-tiled: clustering finds the
+    24 base signatures, so the clustered leg of the cell is exercised."""
+    p = scaling_instance(100, 16, seed=0)
+    assert p.tau == 100 and p.mu == 16
+    assert cluster_tasks(p).n_clusters == 24
+
+
+@pytest.mark.parametrize("method", ["heuristic", "ml"])
+def test_scaling_cell_100x16_under_bar(method):
+    cell = scaling_cell(100, 16, method, fast=True)
+    for leg in ("unclustered", "clustered"):
+        assert cell[leg]["total_s"] <= SOLVE_BAR_S[method], (
+            f"{method}/{leg} solve took {cell[leg]['total_s']:.2f}s "
+            f"(bar {SOLVE_BAR_S[method]}s) — scalability regression?")
+    # quality + feasibility ride along with the timing bar
+    assert cell["capacity_ok"]
+    assert cell["makespan_ratio"] <= 1.05
+    # telemetry satellite: per-phase meta is populated on both legs
+    assert cell["clustered"]["n_clusters"] == 24
+    assert cell["unclustered"]["total_s"] is not None

@@ -1,18 +1,32 @@
-"""Solver quality ordering + certificates on small random instances.
-
-Deliberately hypothesis-free (unlike test_allocation.py) so these run in
-minimal environments too: the §6.3 hierarchy and the MILP dual bound are
-tier-1 invariants of the allocation back-end every domain relies on.
+"""Solver quality ordering + certificates on small random instances,
+plus the scale layer's correctness contracts: task-family clustering
+(exactness for identical families, bounded error with capacity intact)
+and the O(k) incremental patch (bound test + full-solve fallback).
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
+try:  # property sweep widens when hypothesis is available; the
+    # deterministic grid below keeps minimal environments covered
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
 from repro.core import (
     AllocationProblem,
+    capacity_ok,
     check_allocation,
+    cluster_tasks,
+    clustered_allocation,
+    makespan,
     milp_allocation,
     ml_allocation,
+    patch_allocation,
+    platform_usage,
     proportional_allocation,
+    restrict_problem,
     synthetic,
 )
 
@@ -67,3 +81,178 @@ def test_heuristic_degenerate_zero_latency_platform():
     np.testing.assert_allclose(a.A[[0, 2]], 0.0)   # paid platforms idle
     np.testing.assert_allclose(a.A[[1, 3]], 0.5)   # uniform over free ones
     assert a.makespan == 0.0
+
+
+# -- task-family clustering ------------------------------------------------
+
+def tiled_problem(case="Het-Inc", families=4, mult=8, mu=4, psi=0.5, seed=0,
+                  capacity=False):
+    """A fleet instance with exact duplicated task families: ``families``
+    base signatures tiled ``mult`` times each."""
+    base = synthetic.generate_case(case, tau=families, mu=mu, psi=psi,
+                                   seed=seed)
+    idx = np.arange(families * mult) % families
+    p = dataclasses.replace(base, delta=base.delta[:, idx],
+                            gamma=base.gamma[:, idx], c=base.c[idx])
+    if capacity:
+        rng = np.random.default_rng(seed + 1)
+        # per-family resource columns, tiled like the work columns — a
+        # family member must share its whole signature, resource included
+        R = rng.uniform(0.5, 2.0, size=(mu, families))[:, idx]
+        usage = (R * proportional_allocation(p).A).sum(axis=1)
+        p = dataclasses.replace(p, resource=R, capacity=usage * 1.3 + 1e-9)
+    return p
+
+
+def test_clustering_exactness_identical_families():
+    """The exactness anchor: under the ``sum`` gamma model the reduced
+    objective equals the proportionally-expanded full-frame makespan
+    *identically* — no tolerance."""
+    for seed in (0, 3):
+        p = tiled_problem(seed=seed, families=5, mult=7)
+        plan = cluster_tasks(p)
+        assert plan.n_clusters == 5
+        reduced = plan.reduce(p, gamma_model="sum")
+        sub = milp_allocation(reduced, time_limit=20)
+        A = plan.expand(sub.A, mode="proportional")
+        check_allocation(A, p)
+        assert makespan(A, p) == pytest.approx(sub.makespan, rel=1e-12)
+
+
+def test_contiguous_expansion_never_worse_than_proportional():
+    """The contiguous split sheds gamma constants vs the proportional one
+    (same per-platform mass, fewer members touched)."""
+    p = tiled_problem(families=6, mult=6, mu=5, seed=2)
+    plan = cluster_tasks(p)
+    sub = milp_allocation(plan.reduce(p, gamma_model="sum"), time_limit=20)
+    m_prop = makespan(plan.expand(sub.A, mode="proportional"), p)
+    A_cont = plan.expand(sub.A, mode="contiguous")
+    check_allocation(A_cont, p)
+    assert makespan(A_cont, p) <= m_prop * (1 + 1e-9)
+
+
+#: bounded-error bar for the default clustered pipeline (contiguous
+#: expansion + member descent + LP polish) on family-structured instances.
+CLUSTER_TOL = 1.15
+
+_SOLVER_KW = {
+    "heuristic": {},
+    "ml": dict(chains=6, steps=800, rounds=1, seed=0, time_limit=10),
+    "milp": dict(time_limit=10),
+}
+
+
+def _check_clustered_matches(method, case, psi, seed, with_capacity):
+    """Clustered vs unclustered on a duplicated-family instance: valid
+    allocation, makespan within tolerance, zero capacity oversubscription.
+    Shapes are fixed across calls so the ML solver JIT-compiles once."""
+    p = tiled_problem(case=case, families=4, mult=8, mu=4, psi=psi,
+                      seed=seed, capacity=with_capacity)
+    kw = _SOLVER_KW[method]
+    un = {"heuristic": proportional_allocation,
+          "ml": ml_allocation, "milp": milp_allocation}[method](p, **kw)
+    clus = clustered_allocation(p, method, **kw)
+    check_allocation(clus.A, p)
+    assert clus.meta["n_clusters"] == 4
+    assert clus.makespan <= un.makespan * CLUSTER_TOL
+    if with_capacity:
+        usage = platform_usage(clus.A, p)
+        assert (usage <= p.capacity * (1 + 1e-6)).all()
+
+
+@pytest.mark.parametrize("method", ["heuristic", "ml", "milp"])
+@pytest.mark.parametrize("case,psi,seed,with_capacity", [
+    ("Het-Inc", 0.25, 3, False),
+    ("Het-Mix", 1.0, 7, True),
+    ("Hom-Con", 0.25, 11, True),
+    ("Het-Con", 1.0, 19, False),
+])
+def test_clustered_solve_matches_unclustered(method, case, psi, seed,
+                                             with_capacity):
+    _check_clustered_matches(method, case, psi, seed, with_capacity)
+
+
+if st is not None:
+    @pytest.mark.parametrize("method", ["heuristic", "ml", "milp"])
+    @settings(deadline=None, max_examples=8)
+    @given(case=st.sampled_from(["Hom-Con", "Het-Con", "Het-Mix", "Het-Inc"]),
+           psi=st.sampled_from([0.25, 1.0]),
+           seed=st.integers(0, 10_000),
+           with_capacity=st.booleans())
+    def test_clustered_solve_matches_unclustered_property(
+            method, case, psi, seed, with_capacity):
+        """The hypothesis-widened sweep of the deterministic grid above."""
+        _check_clustered_matches(method, case, psi, seed, with_capacity)
+
+
+def test_clustered_milp_within_5pct_at_scale():
+    """The bench acceptance bar, pinned as a test: on the canonical
+    family-structured Het-Inc instance the clustered MILP stays within 5%
+    of the unclustered solve."""
+    p = tiled_problem(case="Het-Inc", families=12, mult=10, mu=8, psi=0.25,
+                      seed=11)
+    un = milp_allocation(p, time_limit=30)
+    clus = clustered_allocation(p, "milp", time_limit=30)
+    check_allocation(clus.A, p)
+    assert clus.meta["n_clusters"] == 12
+    assert clus.makespan <= un.makespan * 1.05
+
+
+def test_clustering_rtol_merges_near_identical():
+    """Near-identical families (1e-4 relative jitter) merge under a
+    quantised signature and the solution stays within the bounded-error
+    bar of the exact-clustering solve."""
+    p = tiled_problem(families=4, mult=8, mu=4, seed=5)
+    rng = np.random.default_rng(9)
+    jitter = 1 + rng.uniform(-1e-4, 1e-4, size=p.delta.shape)
+    p_jit = dataclasses.replace(p, delta=p.delta * jitter)
+    assert cluster_tasks(p_jit).n_clusters == p.tau           # exact: no merge
+    plan = cluster_tasks(p_jit, rtol=1e-2)
+    assert plan.n_clusters == 4                               # quantised: merged
+    clus = clustered_allocation(p_jit, "milp", rtol=1e-2, time_limit=10)
+    un = milp_allocation(p_jit, time_limit=10)
+    check_allocation(clus.A, p_jit)
+    assert clus.makespan <= un.makespan * CLUSTER_TOL
+
+
+# -- O(k) incremental patch ------------------------------------------------
+
+def test_patch_allocation_patched_path():
+    """k arrivals patch the incumbent: only the new columns move, the
+    result honours the bound test, and both paths stay within tolerance
+    of a from-scratch solve."""
+    p = tiled_problem(families=6, mult=6, mu=4, seed=4)
+    old = np.arange(p.tau - 4)
+    new = np.arange(p.tau - 4, p.tau)
+    base = milp_allocation(restrict_problem(p, tasks=old), time_limit=20)
+    A_base = np.zeros((p.mu, p.tau))
+    A_base[:, old] = base.A
+    patched = patch_allocation(p, A_base, new, "milp", time_limit=20)
+    assert patched.meta["incremental"] == "patched"
+    assert patched.meta["patch_tasks"] == 4
+    # old columns untouched, new columns valid
+    np.testing.assert_allclose(patched.A[:, old], A_base[:, old])
+    np.testing.assert_allclose(patched.A.sum(axis=0), 1.0, atol=1e-6)
+    # the designed guarantee: within patch_tol of the fresh heuristic bound
+    bound = patched.meta["heuristic_bound"]
+    assert patched.makespan <= bound * (1 + patched.meta["patch_tol"]) * (1 + 1e-9)
+    # and therefore within tolerance of the from-scratch solve
+    scratch = milp_allocation(p, time_limit=20)
+    assert patched.makespan <= max(scratch.makespan, bound) * (1 + 0.25 + 1e-9)
+
+
+def test_patch_allocation_full_fallback():
+    """A patch that cannot stay within tolerance of the fresh heuristic
+    bound is discarded for a full solve (and says so in meta): the
+    incumbent parks the old task entirely on the platform where it runs
+    100x slow, so holding that share fixed costs ~100 while any fresh
+    solve rebalances it to ~2."""
+    p = AllocationProblem.from_work(np.array([[100.0, 1.0], [1.0, 1.0]]),
+                                    np.zeros((2, 2)))
+    A_base = np.array([[1.0, 0.0], [0.0, 0.0]])
+    fb = patch_allocation(p, A_base, [1], "milp", time_limit=20)
+    assert fb.meta["incremental"] == "full_fallback"
+    assert fb.meta["patched_makespan"] is not None   # the patch was tried
+    scratch = milp_allocation(p, time_limit=20)
+    assert fb.makespan <= scratch.makespan * (1 + 1e-6)
+    np.testing.assert_allclose(fb.A.sum(axis=0), 1.0, atol=1e-6)
