@@ -43,6 +43,18 @@ arrivals into the 1000x64 incumbent. Every ML solve is preceded by an
 untimed warm-up at the same shape so JIT compilation never pollutes the
 timed region.
 
+The ``slo`` section (PR 8 onward) drives a simulated three-platform LM
+fleet with a seeded open-loop Poisson trace at {0.5, 1.0, 2.0}x
+offered/capacity — capacity measured from a closed-loop calibration run,
+not the fitted models' optimistic token rates — with bounded admission,
+shedding, and the SLO brownout ladder armed. Tracked per ratio: TTFT and
+e2e p50/p95/p99 of admitted requests, shed fraction, brownout rung
+occupancy, peak backlog, and the admission barrier's minimum KV headroom
+(zero oversubscription). A guardrail-off control leg at 2.0x rides along:
+its unbounded backlog growth and blown p99 are the A/B the overload
+controls are measured against (CI gates: guarded p99 within target,
+bounded shed fraction, non-negative KV headroom).
+
 The ``faults`` section (PR 6 onward) runs the same instance through a
 scripted three-kind fault storm — a flaky window on the Desktop
 (transient blips), a finite outage on the FPGA, a corrupt window on the
@@ -88,6 +100,19 @@ FLAKY_P = 0.2
 FAULT_MAKESPAN_BAR = 1.5
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_allocation.json")
+
+#: slo section: offered/measured-capacity ratios for the open-loop sweep;
+#: 2.0 is the A/B point where a guardrail-off control leg rides along.
+SLO_RATIOS = (0.5, 1.0, 2.0)
+#: mean generated tokens per trace request (the bounded-Pareto mean the
+#: load factory is tuned to) — the unit all predicted costs are priced in.
+SLO_MEAN_TOK = 12.0
+#: queue budget and calibration workload size, in mean-sized tasks.
+SLO_QUEUE_TASKS = 40
+#: SLO target as a multiple of the queue's real drain time at measured
+#: capacity — 3x leaves headroom at 1x load and is breached only when the
+#: backlog truly diverges.
+SLO_TARGET_SCALE = 3.0
 
 #: scaling sweep: fleet sizes x platform counts, Het-Inc (the paper's
 #: fully-inconsistent hard case) with tiled task families so clustering
@@ -282,6 +307,162 @@ def scaling_section(fast: bool = True) -> dict:
         "taus": list(SCALING_TAUS), "mus": list(SCALING_MUS),
         "families": SCALING_FAMILIES, "case": "Het-Inc", "psi": SCALING_PSI,
         "cells": cells, "milp_build": build, "incremental": incremental,
+    }
+
+
+def slo_section(fast: bool = True) -> dict:
+    """Open-loop overload sweep + the 2x guarded-vs-control A/B.
+
+    Everything is calibrated against a *measured* closed-loop task rate
+    (at this scale the per-dispatch constant dominates real throughput),
+    so "2x capacity" means 2x what the fleet actually sustains.
+    """
+    from repro.core.slo import SLOConfig, quantile
+    from repro.domains.lm_serving import (
+        LMRequest, SimulatedLMPlatform, kv_bytes_per_token,
+    )
+    from repro.runtime import (
+        AdmissionConfig, OnlineConfig, OnlineScheduler, PlatformSpec,
+        Scheduler, make_domain, predicted_unit_rates,
+    )
+    from repro.runtime.loadgen import (
+        ConstantRate, LoadGenerator, lm_request_factory,
+    )
+
+    n_target = 400 if fast else 900
+
+    def specs(per):
+        # three regimes: low-RTT/slow edge, mid rack, fast/far big node;
+        # KV budgets sized in 72-token request slots
+        return [
+            PlatformSpec("Edge", "CPU", "sim", "loc", 4.0, 0.2,
+                         mem_bytes=per * 72 * 120),
+            PlatformSpec("Rack", "GPU", "sim", "loc", 20.0, 1.0,
+                         mem_bytes=per * 72 * 240),
+            PlatformSpec("Big", "GPU", "sim", "loc", 80.0, 5.0,
+                         mem_bytes=per * 72 * 480),
+        ]
+
+    # closed-loop calibration: the task rate the fleet actually sustains
+    cal_reqs = [LMRequest("qwen25_3b", prompt_len=(8, 16)[i % 2],
+                          gen_tokens=int(SLO_MEAN_TOK), batch=1,
+                          max_new_tokens=64, task_id=i)
+                for i in range(SLO_QUEUE_TASKS)]
+    per = kv_bytes_per_token(cal_reqs[0].config(), 1)
+    cal_fleet = [SimulatedLMPlatform(s, seed=0) for s in specs(per)]
+    cal = Scheduler(make_domain("lm_serving", cal_reqs, cal_fleet))
+    cal.characterise(seed=1, token_ladder=(2, 4, 8, 16))
+    cal_rep = cal.execute(cal.allocate(method="heuristic"))
+    busy: dict = {}
+    for r in cal_rep.records:
+        busy[r.platform] = busy.get(r.platform, 0.0) + abs(r.latency)
+    task_rate = SLO_QUEUE_TASKS / max(busy.values())
+    target = SLO_TARGET_SCALE * SLO_QUEUE_TASKS / task_rate
+
+    def run(ratio, *, guarded):
+        seeds = [LMRequest("qwen25_3b", prompt_len=pl, gen_tokens=16,
+                           batch=1, max_new_tokens=64, task_id=i)
+                 for i, pl in enumerate((8, 16))]
+        fleet = [SimulatedLMPlatform(s, seed=0) for s in specs(per)]
+        sched = Scheduler(make_domain("lm_serving", seeds, fleet))
+        sched.characterise(seed=1, token_ladder=(2, 4, 8, 16))
+        R = sum(predicted_unit_rates(sched.models,
+                                     typical_units=SLO_MEAN_TOK).values())
+        lam = ratio * task_rate
+        horizon = n_target / lam
+        queue_s = SLO_QUEUE_TASKS * SLO_MEAN_TOK / R
+        factory = lm_request_factory(archs=("qwen25_3b",),
+                                     prompt_buckets=(8, 16),
+                                     batch=1, max_new_tokens=64)
+        gen = LoadGenerator(ConstantRate(lam), factory, seed=0,
+                            start_id=1000)
+        scenario = gen.scenario(horizon)
+        for p in fleet:
+            p.attach_scenario(scenario)
+        cfg = OnlineConfig(
+            rounds=60, gamma_duty=0.0, open_loop=True,
+            adopt_family_models=True,
+            admission=AdmissionConfig(queue_s=queue_s,
+                                      max_wait_s=target) if guarded else None,
+            slo=SLOConfig(target_s=target, metric="e2e", quantile=0.99,
+                          window=32, min_window=8) if guarded else None,
+            degrade_steps=(0.75, 0.5) if guarded else (),
+            breaker_cooldown=horizon * 0.15)
+        rep = OnlineScheduler(sched, cfg).run(method="heuristic", seed=3,
+                                              scenario=scenario)
+        return rep, horizon
+
+    def leg_stats(rep, horizon):
+        e2e = [m["e2e"] for m in rep.task_metrics.values()]
+        ttft = [m["ttft"] for m in rep.task_metrics.values()]
+        active = [r.backlog_units for r in rep.rounds if r.t <= horizon]
+        kv_min = min((r.kv_headroom for r in rep.rounds), default=None)
+        reasons: dict = {}
+        for ev in rep.shed_events:
+            reasons[ev.reason] = reasons.get(ev.reason, 0) + 1
+        return {
+            "arrivals": rep.arrivals,
+            "n_offered": rep.n_offered,
+            "n_shed": rep.n_shed,
+            "shed_fraction": rep.shed_fraction,
+            "shed_reasons": reasons,
+            "ttft": {f"p{int(q * 100)}": quantile(ttft, q)
+                     for q in (0.5, 0.95, 0.99)},
+            "e2e": {f"p{int(q * 100)}": quantile(e2e, q)
+                    for q in (0.5, 0.95, 0.99)},
+            "peak_backlog_units": max(
+                (r.backlog_units for r in rep.rounds), default=0.0),
+            "peak_active_backlog_units": max(active, default=0.0),
+            "max_queue_depth": max(
+                (r.queue_depth for r in rep.rounds), default=0),
+            # None when admission is off (no barrier, nothing audited)
+            "min_kv_headroom": (None if kv_min is None
+                                or kv_min == float("inf") else kv_min),
+            "brownout_occupancy": {str(k): v for k, v
+                                   in rep.brownout_occupancy.items()},
+            "brownout_rung_final": rep.brownout_rung,
+            "slo": rep.slo,
+        }
+
+    ratios = {}
+    for ratio in SLO_RATIOS:
+        rep, horizon = run(ratio, guarded=True)
+        leg = leg_stats(rep, horizon)
+        ratios[f"{ratio:g}x"] = leg
+        emit(f"allocation.slo.{ratio:g}x", leg["e2e"]["p99"] * 1e6,
+             f"shed={leg['shed_fraction']:.2f};"
+             f"p99={leg['e2e']['p99'] * 1e3:.0f}ms;"
+             f"attainment={leg['slo']['attainment']:.2f}")
+
+    ctl_rep, ctl_horizon = run(2.0, guarded=False)
+    control = leg_stats(ctl_rep, ctl_horizon)
+    guarded = ratios["2x"]
+    ab = {
+        "target_s": target,
+        "guarded_p99_e2e": guarded["e2e"]["p99"],
+        "control_p99_e2e": control["e2e"]["p99"],
+        "guarded_within_target": guarded["e2e"]["p99"] <= target,
+        "control_within_target": control["e2e"]["p99"] <= target,
+        "backlog_ratio": (control["peak_active_backlog_units"]
+                          / max(guarded["peak_active_backlog_units"], 1e-9)),
+        "kv_oversubscribed": guarded["min_kv_headroom"] < 0.0,
+    }
+    emit("allocation.slo.ab", control["e2e"]["p99"] * 1e6,
+         f"guarded_p99={guarded['e2e']['p99'] * 1e3:.0f}ms"
+         f"(target={target * 1e3:.0f}ms);"
+         f"control_p99={control['e2e']['p99'] * 1e3:.0f}ms;"
+         f"backlog_ratio={ab['backlog_ratio']:.1f}x")
+
+    return {
+        "fleet": [s.name for s in specs(per)],
+        "mean_gen_tokens": SLO_MEAN_TOK,
+        "n_target": n_target,
+        "measured_task_rate": task_rate,
+        "target_s": target,
+        "target_scale": SLO_TARGET_SCALE,
+        "ratios": ratios,
+        "control_2x": control,
+        "ab": ab,
     }
 
 
@@ -523,6 +704,9 @@ def main(fast: bool = True) -> None:
          f"recovered={len(storm_rep.recovered_platforms)};"
          f"lost={lost};static_failed={static_leg['failed']}")
 
+    # -- slo: open-loop overload sweep + the 2x guarded/control A/B -------
+    slo = slo_section(fast)
+
     # -- scaling: fleet-size sweep, build speedup, incremental patch ------
     scaling = scaling_section(fast)
 
@@ -538,6 +722,7 @@ def main(fast: bool = True) -> None:
         "overlap": overlap,
         "online": online,
         "faults": faults,
+        "slo": slo,
         "scaling": scaling,
     }
     with open(OUT_PATH, "w") as fh:

@@ -11,6 +11,8 @@ Public API:
         patch_allocation (O(k) incremental re-solve for k arrivals)
     Synthetic characterisation (§6.1): synthetic.generate / TABLE3_CASES
     Pareto surfaces (§3.2.3): pareto.sweep / platform_curves
+    SLO tail metrics: quantile, P2Quantile (streaming P-squared),
+        SLOConfig / SLOTracker (TTFT/TPOT/e2e percentiles + attainment)
 """
 from .allocation import (  # noqa: F401
     SUPPORT_ATOL,
@@ -43,4 +45,5 @@ from .metrics import (  # noqa: F401
     wls,
 )
 from .milp import milp_allocation  # noqa: F401
+from .slo import P2Quantile, SLOConfig, SLOTracker, quantile  # noqa: F401
 from . import pareto, synthetic  # noqa: F401

@@ -105,13 +105,20 @@ class LMRequest:
 
 @dataclasses.dataclass(frozen=True)
 class ServeRecord:
-    """One executed generation shard."""
+    """One executed generation shard.
+
+    ``queue_delay`` is time the request spent *waiting* inside its
+    dispatch for KV pages to free before joining the decode batch — it
+    is not part of ``latency`` (record latencies sum to platform busy
+    time, and waiting is not work), but TTFT accounting adds it back.
+    """
 
     platform: str
     task_id: int
     n_tokens: int
     latency: float            # seconds, prefill included
     prefill_latency: float = 0.0
+    queue_delay: float = 0.0
 
     @property
     def tokens_per_s(self) -> float:
@@ -351,34 +358,45 @@ class SimulatedLMPlatform(_LMPlatformBase):
         self.clock = 0.0
 
     def _continuous_plan(self, reqs: Sequence[LMRequest],
-                         tokens: Sequence[int]) -> tuple[list[float], list[float]]:
-        """Clean (jitter-free) per-request (prefill, attributed decode)
-        seconds under KV-gated lockstep continuous batching."""
+                         tokens: Sequence[int]) -> tuple[
+                             list[float], list[float], list[float]]:
+        """Clean (jitter-free) per-request (prefill, attributed decode,
+        queue wait) seconds under KV-gated lockstep continuous batching.
+
+        ``wait[i]`` is the in-dispatch time request ``i`` spent queued for
+        KV pages before joining the decode batch — zero for everything
+        admitted in the first wave, and the TTFT-visible queueing delay
+        for requests gated behind a full cache.
+        """
         cap = self.spec.mem_bytes
         gps = self.spec.gflops * 1e9
         d = [flops_per_token(r.config(), r.batch) / gps for r in reqs]
         prefill = [r.prompt_len * di for r, di in zip(reqs, d)]
         need = [request_kv_bytes(r, n) for r, n in zip(reqs, tokens)]
         decode = [0.0] * len(reqs)
+        wait = [0.0] * len(reqs)
         remaining = [int(n) for n in tokens]
         queue = deque(range(len(reqs)))
         active: list[int] = []
         held = 0.0
+        t_clock = 0.0  # wall time inside this dispatch's shared batch
         while queue or active:
             while queue and held + need[queue[0]] <= cap:
                 i = queue.popleft()
                 active.append(i)
                 held += need[i]
+                wait[i] = t_clock
             k = len(active)
             share = (1.0 + self.batch_alpha * (k - 1)) / k
             step = min(remaining[i] for i in active)
             for i in active:
                 decode[i] += d[i] * share * step
                 remaining[i] -= step
+            t_clock += share * step * sum(d[i] for i in active)
             for i in [i for i in active if remaining[i] <= 0]:
                 active.remove(i)
                 held -= need[i]
-        return prefill, decode
+        return prefill, decode, wait
 
     def run(self, req: LMRequest, n_tokens: int, seed: int = 0) -> ServeRecord:
         return self.run_batch([req], n_tokens, seed=seed)[0]
@@ -388,31 +406,35 @@ class SimulatedLMPlatform(_LMPlatformBase):
         tokens = [self._clamp(r, n) for r, n in
                   zip(reqs, _as_token_list(reqs, n_tokens))]
         self._admission_guard(reqs, tokens)
-        prefill, decode = self._continuous_plan(reqs, tokens)
+        prefill, decode, wait = self._continuous_plan(reqs, tokens)
 
         def finish(item) -> ServeRecord:
-            req, n, pre_s, dec_s = item
+            req, n, pre_s, dec_s, wait_s = item
             # stable across processes (unlike hash(): PYTHONHASHSEED
             # randomises str hashing), so seeded runs reproduce exactly
             key = zlib.crc32(f"{self.spec.name}/{req.task_id}/{n}/{seed}".encode())
             rng = np.random.default_rng(key + self._seed)
             jitter = rng.lognormal(0.0, self.jitter)
             pre = pre_s * jitter
+            qd = wait_s * jitter
             latency = (pre_s + dec_s + self.spec.rtt_ms * 1e-3) * jitter
             if self.scenario is not None:
                 stretched = apply_scenario(self, latency)
-                pre *= stretched / max(latency, 1e-300)
+                scale = stretched / max(latency, 1e-300)
+                pre *= scale
+                qd *= abs(scale)  # waiting stretches with the slowdown too
                 latency = stretched
             if self.realtime:
                 # corrupt-window runs report a negated latency; the real
                 # work still took |latency| of wall clock
                 time.sleep(abs(latency) * self.realtime)
             return ServeRecord(self.spec.name, req.task_id, n, latency,
-                               prefill_latency=pre)
+                               prefill_latency=pre, queue_delay=qd)
 
         # an outage striking mid-batch re-raises with the completed records
         # attached (see scenario.salvage_runs) so dispatchers keep them
-        return salvage_runs(finish, list(zip(reqs, tokens, prefill, decode)))
+        return salvage_runs(finish,
+                            list(zip(reqs, tokens, prefill, decode, wait)))
 
 
 def _as_token_list(reqs: Sequence[LMRequest], n_tokens) -> list[int]:
@@ -510,6 +532,20 @@ class LMServingDomain(Domain):
 
     def record_units(self, record: ServeRecord) -> int:
         return int(record.n_tokens)
+
+    # -- SLO / overload control --------------------------------------------
+
+    def record_ttft(self, record: ServeRecord, end_t: float) -> float:
+        """First-token time for a serve record: the record's span starts
+        at ``end_t - |latency|``; the first token lands after the
+        in-dispatch queue wait plus prefill (clamped into the record's
+        span so corrupt/stretched records stay well-ordered)."""
+        span = abs(record.latency)
+        first = record.queue_delay + abs(record.prefill_latency)
+        return end_t - span + min(first, span)
+
+    def task_quality(self, req: LMRequest) -> float:
+        return float(req.gen_tokens)
 
     def dispatch_batch(self, platform, reqs: Sequence[LMRequest],
                        units: Sequence[int], seed: int = 0) -> list[ServeRecord]:

@@ -9,6 +9,14 @@ generic :class:`Scheduler` that drives the loop over the shared
     sched = Scheduler(make_domain("lm_serving", requests, fleet))
     report = sched.run(method="milp")
 """
+from .admission import (  # noqa: F401
+    AdmissionConfig,
+    AdmissionController,
+    BrownoutTransition,
+    RejectedTask,
+    ShedEvent,
+    predicted_unit_rates,
+)
 from .domain import Domain, PlatformSpec, RunRecordLike, seed_for  # noqa: F401
 from .executor import Executor, TimedResult  # noqa: F401
 from .faults import (  # noqa: F401
@@ -24,11 +32,19 @@ from .faults import (  # noqa: F401
     TransientFault,
     check_records,
 )
+from .loadgen import (  # noqa: F401
+    BurstyRate,
+    ConstantRate,
+    DiurnalRate,
+    LoadGenerator,
+    lm_request_factory,
+)
 from .online import (  # noqa: F401
     DriftDetector,
     OnlineConfig,
     OnlineReport,
     OnlineScheduler,
+    TailDriftDetector,
 )
 from .records import dump_records, group_records, load_records  # noqa: F401
 from .registry import (  # noqa: F401

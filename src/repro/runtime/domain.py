@@ -245,6 +245,26 @@ class Domain(abc.ABC):
         if clock is not None:
             platform.clock = max(clock, elapsed)
 
+    # -- SLO / overload control (optional) ---------------------------------
+
+    def record_ttft(self, record: RunRecordLike, end_t: float) -> float:
+        """Virtual time at which a record's *first output* became visible,
+        given the virtual time ``end_t`` at which the record finished.
+
+        Tail-latency accounting (TTFT percentiles) asks when a task first
+        produced output, which for atomic records is simply when they
+        finished. Domains whose records distinguish an in-record first
+        response (LM serving's prefill + queueing delay inside a
+        continuous batch) override this."""
+        return end_t
+
+    def task_quality(self, task) -> float:
+        """Admission-time work proxy for one task — its intrinsic quality
+        target in work units (tokens for LM serving), used to price a
+        not-yet-characterised arrival against the admission queue budget.
+        Default 1.0: every task costs one unit until characterised."""
+        return 1.0
+
     # -- capacity (optional second constraint dimension) -------------------
 
     def resource_per_unit(self, platform, task) -> float:

@@ -1,0 +1,191 @@
+"""Deterministic open-loop load generation for trace-driven serving.
+
+The scenario layer (PR 4) takes hand-scheduled arrivals; the north-star
+regime is *open-loop* traffic — requests arrive on their own schedule
+regardless of whether the fleet keeps up, which is exactly when offered
+load can exceed capacity and the admission layer
+(:mod:`repro.runtime.admission`) earns its keep.
+
+A :class:`LoadGenerator` samples a non-homogeneous Poisson process by
+Lewis–Shedler thinning from a :class:`RateProcess` (constant, diurnal
+sinusoid, or square-wave bursts), draws each request from a task factory
+(for LM serving: Zipf-weighted request families with bounded-Pareto
+heavy-tailed output lengths — the shape of production serving traces),
+and emits the result as timestamped :meth:`Scenario.arrive` entries.
+Everything downstream is the *existing* admission path, so a trace
+replays bit-for-bit: one seeded generator, one sequential RNG, no wall
+clocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.runtime.scenario import Scenario
+
+__all__ = ["ConstantRate", "DiurnalRate", "BurstyRate", "LoadGenerator",
+           "lm_request_factory"]
+
+
+# --------------------------------------------------------------------------
+# Rate processes
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConstantRate:
+    """Homogeneous Poisson arrivals at ``rate_per_s``."""
+
+    rate_per_s: float
+
+    def rate(self, t: float) -> float:
+        return self.rate_per_s
+
+    @property
+    def peak(self) -> float:
+        return self.rate_per_s
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalRate:
+    """Sinusoidal day/night load curve around ``base_per_s``.
+
+    ``rate(t) = base * (1 + amplitude * sin(2*pi*(t + phase)/period))``;
+    amplitude in [0, 1) keeps the intensity positive.
+    """
+
+    base_per_s: float
+    amplitude: float = 0.5
+    period_s: float = 60.0
+    phase: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1)")
+
+    def rate(self, t: float) -> float:
+        return self.base_per_s * (
+            1.0 + self.amplitude
+            * math.sin(2.0 * math.pi * (t + self.phase) / self.period_s))
+
+    @property
+    def peak(self) -> float:
+        return self.base_per_s * (1.0 + self.amplitude)
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyRate:
+    """Square-wave bursts: ``burst_per_s`` for the first ``duty`` fraction
+    of every period, ``base_per_s`` otherwise."""
+
+    base_per_s: float
+    burst_per_s: float
+    period_s: float = 30.0
+    duty: float = 0.2
+
+    def __post_init__(self):
+        if not 0.0 < self.duty < 1.0:
+            raise ValueError("duty must be in (0, 1)")
+
+    def rate(self, t: float) -> float:
+        frac = (t % self.period_s) / self.period_s
+        return self.burst_per_s if frac < self.duty else self.base_per_s
+
+    @property
+    def peak(self) -> float:
+        return max(self.base_per_s, self.burst_per_s)
+
+
+# --------------------------------------------------------------------------
+# The generator
+# --------------------------------------------------------------------------
+
+class LoadGenerator:
+    """Seeded open-loop arrival trace over a rate process.
+
+    Lewis–Shedler thinning: candidate inter-arrivals are exponential at
+    the process's peak rate; each candidate survives with probability
+    ``rate(t) / peak``. One sequential RNG drives both the thinning and
+    the task factory, so the trace is a pure function of (seed, rate
+    process, factory) — replays are bit-for-bit, and two generators with
+    different seeds are independent.
+    """
+
+    def __init__(self, rate: Any, make_task: Callable[[np.random.Generator, int], Any],
+                 seed: int = 0, start_id: int = 1000):
+        if rate.peak <= 0:
+            raise ValueError("rate process must have a positive peak rate")
+        self.rate_process = rate
+        self.make_task = make_task
+        self.seed = seed
+        self.start_id = start_id
+
+    def arrivals(self, horizon_s: float) -> list[tuple[float, Any]]:
+        """Sample the timestamped trace over ``[0, horizon_s)``."""
+        rng = np.random.default_rng(self.seed)
+        peak = self.rate_process.peak
+        out: list[tuple[float, Any]] = []
+        t = 0.0
+        tid = self.start_id
+        while True:
+            t += float(rng.exponential(1.0 / peak))
+            if t >= horizon_s:
+                break
+            if float(rng.random()) * peak <= self.rate_process.rate(t):
+                out.append((t, self.make_task(rng, tid)))
+                tid += 1
+        return out
+
+    def scenario(self, horizon_s: float,
+                 base: Scenario | None = None) -> Scenario:
+        """Emit the trace into a :class:`Scenario` (a fresh one by
+        default) through the existing ``arrive`` admission path."""
+        sc = base if base is not None else Scenario()
+        for t, task in self.arrivals(horizon_s):
+            sc.arrive(t, task)
+        return sc
+
+
+# --------------------------------------------------------------------------
+# LM request factory: heavy-tailed lengths over request families
+# --------------------------------------------------------------------------
+
+def _bounded_pareto(u: float, lo: int, hi: int, alpha: float) -> int:
+    """Inverse-CDF sample from a Pareto truncated to [lo, hi]."""
+    la, ha = lo ** -alpha, hi ** -alpha
+    return int(min(max((la - u * (la - ha)) ** (-1.0 / alpha), lo), hi))
+
+
+def lm_request_factory(archs: Sequence[str] = ("qwen25_3b",),
+                       prompt_buckets: Sequence[int] = (8, 16),
+                       batch: int = 1, max_new_tokens: int = 64,
+                       tail_alpha: float = 1.5, min_tokens: int = 4,
+                       family_zipf: float = 1.2) -> Callable:
+    """Task factory drawing LM requests with production-trace shape.
+
+    Request *families* (arch x prompt bucket — the compile units) are
+    Zipf-weighted (rank ``r`` has weight ``r**-family_zipf``): a few hot
+    families dominate, a long tail of cold ones trickles.  Output
+    lengths are bounded-Pareto with index ``tail_alpha`` — heavy-tailed
+    generation lengths are what make tail latency diverge from the
+    median and give the p99 guardrail something real to guard.
+    """
+    families = [(arch, p) for arch in archs for p in prompt_buckets]
+    weights = np.array([(r + 1) ** -family_zipf
+                        for r in range(len(families))])
+    weights /= weights.sum()
+
+    def make(rng: np.random.Generator, task_id: int):
+        from repro.domains.lm_serving import LMRequest
+
+        fam = families[int(rng.choice(len(families), p=weights))]
+        gen = _bounded_pareto(float(rng.random()), min_tokens,
+                              max_new_tokens, tail_alpha)
+        return LMRequest(arch=fam[0], prompt_len=fam[1], gen_tokens=gen,
+                         batch=batch, max_new_tokens=max_new_tokens,
+                         task_id=task_id)
+
+    return make

@@ -61,6 +61,13 @@ from repro.core import (
     restrict_problem,
 )
 from repro.core.metrics import AccuracyModel, CombinedModel, LatencyModel
+from repro.core.slo import SLOConfig, SLOTracker, quantile
+from .admission import (
+    AdmissionConfig,
+    AdmissionController,
+    BrownoutTransition,
+    predicted_unit_rates,
+)
 from .domain import RunRecordLike, seed_for
 from .faults import (
     HALF_OPEN,
@@ -77,7 +84,7 @@ from .scenario import PlatformOutage, Scenario
 from .scheduler import SOLVERS, Scheduler
 
 __all__ = ["OnlineScheduler", "OnlineConfig", "OnlineReport", "DriftDetector",
-           "RoundLog"]
+           "TailDriftDetector", "RoundLog"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +150,40 @@ class OnlineConfig:
     #: patched-makespan tolerance vs the fresh full-problem heuristic bound
     #: before the patch is discarded for a full re-solve.
     patch_tol: float = 0.25
+    #: open-loop serving mode: rounds are time barriers on a shared fleet
+    #: clock (idle platforms advance to each round's start), the per-round
+    #: tranche fraction is 1 (arrivals drive the pacing, not stagger), an
+    #: idle fleet fast-forwards to the trace's next arrival instead of
+    #: force-draining it, and exhausting ``max_rounds`` truncates the trace
+    #: rather than raising — open-loop load has no drain-to-empty contract.
+    open_loop: bool = False
+    #: bounded admission control (queue sizing, backpressure, shedding);
+    #: None admits every arrival unconditionally — the legacy behaviour,
+    #: and the "guardrail off" control leg of the overload A/B.
+    admission: AdmissionConfig | None = None
+    #: SLO tail tracking (TTFT/TPOT/e2e percentiles per completed task);
+    #: with ``degrade_steps`` set it also arms the brownout ladder, which
+    #: walks quality down a rung when the recent guardrail quantile
+    #: breaches the SLO and restores it when pressure clears.
+    slo: SLOConfig | None = None
+    #: tail-ratio drift threshold: |p-quantile(measured/predicted) - 1| per
+    #: platform that fires a re-solve even when the median is quiet.
+    #: None disables the tail detector (median-only, the legacy detector).
+    tail_threshold: float | None = None
+    #: records per platform in the tail detector's rolling window (larger
+    #: than the median's — a p99 of 6 records is meaningless).
+    tail_window: int = 12
+    #: which tail the tail detector watches.
+    tail_quantile: float = 0.99
+    #: observations required before the tail detector can fire.
+    min_tail_records: int = 6
+    #: adopt fitted models for arrivals whose launch key matches an
+    #: already-characterised task (see :meth:`Scheduler.adopt_models`)
+    #: instead of re-benchmarking every arrival — the only admission cost
+    #: that scales to trace-driven load. Off by default: adoption skips
+    #: the arrival's own characterise records, which changes record
+    #: streams for closed-loop runs that assert on them.
+    adopt_family_models: bool = False
 
 
 #: effectively-infinite per-unit latency, but small enough that the MILP's
@@ -169,23 +210,18 @@ class _UnreachableModel:
     accuracy = AccuracyModel(alpha=1e-300)
 
 
-class DriftDetector:
+class _RatioWindow:
     """Rolling predicted-vs-measured latency ratios per platform.
 
     Every executed record contributes ``measured / predicted`` under the
     models the *current allocation was solved with* (re-fitting must not
-    wash out the signal it is meant to raise); a platform drifts when the
-    rolling **median** ratio strays from 1 by more than the threshold.
-    The median — not the mean — gates the decision deliberately: a lone
-    straggler record cannot trigger a re-solve, and by the time the median
-    moves, the majority of the window sits in the new regime, so the
-    median ratio doubles as an immediately usable drift-correction factor
-    for stale window records at re-fit time (a mean-gated detector fires
-    earlier but with a correction factor of ~1, wasting the re-solve).
+    wash out the signal it is meant to raise); a platform drifts when a
+    subclass's summary statistic over the rolling window strays from 1 by
+    more than the threshold.  An empty window reads as ratio 1.0 (zero
+    error): no evidence is not evidence of drift.
     """
 
-    def __init__(self, window: int = 8, threshold: float = 0.5,
-                 min_records: int = 3):
+    def __init__(self, window: int, threshold: float, min_records: int):
         self.window = window
         self.threshold = threshold
         self.min_records = min_records
@@ -195,16 +231,19 @@ class DriftDetector:
         self._ratios.setdefault(platform, deque(maxlen=self.window)).append(
             measured / max(predicted, 1e-12))
 
-    def error(self, platform: str) -> float:
-        """|median ratio - 1|: the rolling relative latency error."""
-        rs = self._ratios.get(platform)
-        if not rs:
-            return 0.0
-        return abs(self.median_ratio(platform) - 1.0)
+    def _statistic(self, ratios: list[float]) -> float:
+        raise NotImplementedError
 
-    def median_ratio(self, platform: str) -> float:
+    def ratio(self, platform: str) -> float:
+        """The window's summary ratio; 1.0 on an empty window."""
         rs = self._ratios.get(platform)
-        return float(np.median(list(rs))) if rs else 1.0
+        return self._statistic(list(rs)) if rs else 1.0
+
+    def error(self, platform: str) -> float:
+        """|summary ratio - 1|: the rolling relative latency error."""
+        if not self._ratios.get(platform):
+            return 0.0
+        return abs(self.ratio(platform) - 1.0)
 
     def drifted(self, alive: dict[str, bool] | None = None) -> tuple[str, ...]:
         fired = []
@@ -217,6 +256,50 @@ class DriftDetector:
 
     def reset(self) -> None:
         self._ratios.clear()
+
+
+class DriftDetector(_RatioWindow):
+    """Median-gated drift detector (the re-solve trigger since PR 4).
+
+    The median — not the mean — gates the decision deliberately: a lone
+    straggler record cannot trigger a re-solve, and by the time the median
+    moves, the majority of the window sits in the new regime, so the
+    median ratio doubles as an immediately usable drift-correction factor
+    for stale window records at re-fit time (a mean-gated detector fires
+    earlier but with a correction factor of ~1, wasting the re-solve).
+    """
+
+    def __init__(self, window: int = 8, threshold: float = 0.5,
+                 min_records: int = 3):
+        super().__init__(window, threshold, min_records)
+
+    def _statistic(self, ratios: list[float]) -> float:
+        return float(np.median(ratios))
+
+    def median_ratio(self, platform: str) -> float:
+        return self.ratio(platform)
+
+
+class TailDriftDetector(_RatioWindow):
+    """Tail-quantile companion to :class:`DriftDetector`.
+
+    Watches the p-quantile (default p99) of the same per-platform ratio
+    window: a platform whose *tail* latencies blow up — contention,
+    stragglers, queueing — while the median stays quiet breaches the SLO
+    long before the median detector notices.  Needs a larger window and a
+    looser threshold than the median (a p99 over six records is noise).
+    """
+
+    def __init__(self, window: int = 12, threshold: float = 1.0,
+                 min_records: int = 6, q: float = 0.99):
+        super().__init__(window, threshold, min_records)
+        self.q = q
+
+    def _statistic(self, ratios: list[float]) -> float:
+        return float(quantile(ratios, self.q))
+
+    def tail_ratio(self, platform: str) -> float:
+        return self.ratio(platform)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,6 +318,29 @@ class RoundLog:
     solve_outcome: str | None
     #: platforms whose breaker probe succeeded this round (re-admitted).
     revived: tuple[str, ...] = ()
+    #: platforms whose tail (p99) ratio fired this round (overload drift).
+    tail_drifted: tuple[str, ...] = ()
+    #: arrivals offered to admission control this round (== arrivals when
+    #: admission is off).
+    offered: int = 0
+    #: arrivals shed this round (queue-full / capacity / timeout).
+    shed: int = 0
+    #: admission-queue depth at the end of the round.
+    queue_depth: int = 0
+    #: outstanding dispatch quota units at the end of the round — the
+    #: quantity whose boundedness (vs monotone growth) is the overload
+    #: acceptance criterion.
+    backlog_units: float = 0.0
+    #: brownout ladder rung in force at the end of the round.
+    brownout_rung: int = 0
+    #: tasks that completed (all quotas drained) this round.
+    completions: int = 0
+    #: fleet-clock time (max platform timeline) at the end of the round.
+    t: float = 0.0
+    #: min over alive platforms of remaining KV capacity (bytes) at the
+    #: admission barrier — negative would mean the fleet oversubscribed.
+    #: inf when admission control is off (no audit is computed).
+    kv_headroom: float = math.inf
 
 
 @dataclasses.dataclass
@@ -270,6 +376,24 @@ class OnlineReport:
     #: solver telemetry per solve that ran (initial + re-solves + patches):
     #: build_s/solve_s phases, n_vars/n_constraints, incremental outcome.
     solve_metas: list = dataclasses.field(default_factory=list)
+    #: overload-control audit trails (see repro.runtime.admission)
+    shed_events: list = dataclasses.field(default_factory=list)
+    brownout_transitions: list = dataclasses.field(default_factory=list)
+    n_offered: int = 0              # arrivals offered to admission control
+    n_shed: int = 0                 # arrivals shed (all reasons)
+    brownout_rung: int = 0          # final brownout rung
+    #: rounds spent at each brownout rung (rung -> round count).
+    brownout_occupancy: dict = dataclasses.field(default_factory=dict)
+    #: SLOTracker.snapshot() when config.slo is set, else None: lifetime
+    #: p50/p95/p99 of TTFT/TPOT/e2e over completed tasks + attainment.
+    slo: dict | None = None
+    #: per-completed-task latency metrics: tid -> {ttft, tpot, e2e, units}.
+    task_metrics: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def shed_fraction(self) -> float:
+        """Fraction of offered arrivals shed (0.0 when nothing offered)."""
+        return self.n_shed / self.n_offered if self.n_offered else 0.0
 
     @property
     def makespan_error(self) -> float:
@@ -556,8 +680,11 @@ class OnlineScheduler:
         rounds_left = max(cfg.rounds - round_idx, 1)
         w = cfg.stagger[round_idx % len(cfg.stagger)] if cfg.stagger else 1.0
         # the final planned round flushes everything — a sub-1 stagger
-        # weight there would leak a sliver into an extra leftover round
-        frac = 1.0 if rounds_left == 1 else min(w / rounds_left, 1.0)
+        # weight there would leak a sliver into an extra leftover round.
+        # Open-loop runs flush every round: the trace paces the work, and
+        # holding quota back would just queue admitted requests longer.
+        frac = (1.0 if rounds_left == 1 or cfg.open_loop
+                else min(w / rounds_left, 1.0))
         plan = []
         for p in domain.platforms:
             pname = domain.platform_name(p)
@@ -695,6 +822,28 @@ class OnlineScheduler:
         recovered: set[str] = set()
         rung, n_probes = 0, 0
 
+        # -- overload-control state (all round-barrier, mode-parity safe)
+        admission = (AdmissionController(cfg.admission)
+                     if cfg.admission is not None else None)
+        slo_tracker = SLOTracker(cfg.slo) if cfg.slo is not None else None
+        tail = (TailDriftDetector(cfg.tail_window, cfg.tail_threshold,
+                                  cfg.min_tail_records, cfg.tail_quantile)
+                if cfg.tail_threshold is not None else None)
+        shed_events: list = []
+        brownout_transitions: list[BrownoutTransition] = []
+        brown_rung = 0
+        brown_occupancy: dict[int, int] = {}
+        # per-task latency accounting for TTFT/TPOT/e2e: arrival time,
+        # first-output time, last-output time, served units, completion
+        arr_t: dict[int, float] = {}
+        task_first: dict[int, float] = {}
+        task_last: dict[int, float] = {}
+        task_units: dict[int, int] = {}
+        completed_tasks: set[int] = set()
+        task_metrics: dict[int, dict] = {}
+        rates_version = -1
+        unit_rates: dict[str, float] = {}
+
         solve_t0 = time.perf_counter()
         alloc, A_full, quotas, rung = self._solve_degraded(
             quality, rung, method, solver_kw, alive, done, incumbent_A=None,
@@ -715,11 +864,24 @@ class OnlineScheduler:
         rounds: list[RoundLog] = []
 
         for round_idx in range(cfg.max_rounds):
+            elapsed = max(plat_lat.values(), default=0.0)
+            if cfg.open_loop:
+                # rounds are *time barriers* on a shared fleet clock: a
+                # platform that finished its tranche early idled until the
+                # barrier, so its timeline (and virtual clock) resumes at
+                # the round start, not at its own busy-time sum — this is
+                # what makes per-task e2e latencies real waiting times
+                for p in domain.platforms:
+                    pname = domain.platform_name(p)
+                    if alive[pname]:
+                        plat_lat[pname] = max(plat_lat[pname], elapsed)
+                        domain.advance_platform(p, elapsed)
+            round_t0 = elapsed
+            round_busy = 0.0
             # breaker recovery at the round barrier: OPEN platforms whose
             # cooldown (in workload elapsed virtual time) has passed go
             # HALF_OPEN and take a cheap probe; a clean probe re-admits
             # them to the allocation (the one-way dead set, undone)
-            elapsed = max(plat_lat.values(), default=0.0)
             revived: list[str] = []
             for p in domain.platforms:
                 pname = domain.platform_name(p)
@@ -742,6 +904,15 @@ class OnlineScheduler:
                     quotas[key] = max(quotas.get(key, 0.0) - units, 0.0)
                     windows.setdefault(
                         key, deque(maxlen=cfg.refit_window)).append(rec)
+                    end_t = elapsed + probe_lat
+                    first_t = domain.record_ttft(rec, end_t)
+                    prev = task_first.get(rec.task_id)
+                    task_first[rec.task_id] = (
+                        first_t if prev is None else min(prev, first_t))
+                    task_last[rec.task_id] = max(
+                        task_last.get(rec.task_id, 0.0), end_t)
+                    task_units[rec.task_id] = (
+                        task_units.get(rec.task_id, 0) + units)
                 if ok:
                     breaker.record_success(pname, elapsed, round_idx)
                     # the platform idled while down: its timeline resumes
@@ -755,10 +926,27 @@ class OnlineScheduler:
                     breaker.record_failure(pname, elapsed, round_idx)
 
             if not any(q > 0 for q in quotas.values()):
-                # drain the arrival queue: no more work means virtual time
-                # cannot advance to reach stragglers, so they join now
+                late: list[tuple[float, Any]] = []
                 if scenario is not None and scenario.pending_arrivals:
-                    late = scenario.take_arrivals(0.0, force=True)
+                    if cfg.open_loop:
+                        # idle fleet, trace still running: fast-forward the
+                        # barrier clock to the next arrival instant — open
+                        # loop means requests come on their own schedule,
+                        # not when the fleet is ready for them
+                        target = max(elapsed, scenario.next_arrival_time)
+                        for p in domain.platforms:
+                            pname = domain.platform_name(p)
+                            if alive[pname]:
+                                plat_lat[pname] = max(plat_lat[pname], target)
+                                domain.advance_platform(p, target)
+                        elapsed = round_t0 = target
+                    else:
+                        # drain the arrival queue: no more work means
+                        # virtual time cannot advance to reach stragglers,
+                        # so they join now
+                        late = scenario.take_arrivals_timed(0.0, force=True)
+                elif admission is not None and admission.pending:
+                    pass  # queued arrivals still waiting for admission
                 else:
                     break
             else:
@@ -785,6 +973,7 @@ class OnlineScheduler:
                 for rec in res.records:
                     all_records.append(rec)
                     plat_lat[pname] += rec.latency
+                    round_busy += abs(rec.latency)
                     units = domain.record_units(rec)
                     dispatched[pname] = dispatched.get(pname, 0) + units
                     done[rec.task_id] = done.get(rec.task_id, 0.0) + units
@@ -793,10 +982,20 @@ class OnlineScheduler:
                     quotas[key] = max(quotas.get(key, 0.0) - units, 0.0)
                     windows.setdefault(
                         key, deque(maxlen=cfg.refit_window)).append(rec)
-                    detector.observe(
-                        pname,
-                        domain.predicted_latency(solve_models[key], units),
-                        rec.latency)
+                    predicted = domain.predicted_latency(
+                        solve_models[key], units)
+                    detector.observe(pname, predicted, rec.latency)
+                    if tail is not None:
+                        tail.observe(pname, predicted, rec.latency)
+                    end_t = plat_lat[pname]
+                    first_t = domain.record_ttft(rec, end_t)
+                    prev = task_first.get(rec.task_id)
+                    task_first[rec.task_id] = (
+                        first_t if prev is None else min(prev, first_t))
+                    task_last[rec.task_id] = max(
+                        task_last.get(rec.task_id, 0.0), end_t)
+                    task_units[rec.task_id] = (
+                        task_units.get(rec.task_id, 0) + units)
                 for ev in res.faults:
                     fault_events.append(ev)
                     # retries burn real virtual time on the platform's
@@ -824,14 +1023,98 @@ class OnlineScheduler:
                           if not was_dead[pn] and not breaker.available(pn)]
             for pn in names:
                 alive[pn] = breaker.available(pn)
-            arrived = list(late)
+            # -- completion barrier: tasks whose quotas fully drained this
+            # round yield their TTFT/TPOT/e2e observations (streaming into
+            # the SLO tracker) before any re-solve rebuilds the quotas
+            completions = 0
+            out_by_tid: dict[int, float] = {}
+            for (_pn, tid), q in quotas.items():
+                if q > 0:
+                    out_by_tid[tid] = out_by_tid.get(tid, 0.0) + q
+            for tid in sorted(task_first):
+                if tid in completed_tasks or out_by_tid.get(tid, 0.0) > 0:
+                    continue
+                arr = arr_t.get(tid, 0.0)
+                first = task_first[tid]
+                last = max(task_last.get(tid, first), first)
+                ttft = max(first - arr, 0.0)
+                e2e = max(last - arr, ttft)
+                units = task_units.get(tid, 1)
+                tpot = (e2e - ttft) / max(units - 1, 1)
+                if slo_tracker is not None:
+                    slo_tracker.observe(ttft, tpot, e2e)
+                task_metrics[tid] = {"ttft": ttft, "tpot": tpot,
+                                     "e2e": e2e, "units": units}
+                completed_tasks.add(tid)
+                completions += 1
+
+            offered_timed = list(late)
             if scenario is not None:
-                arrived += scenario.take_arrivals(elapsed)
+                offered_timed += scenario.take_arrivals_timed(elapsed)
             # idempotent admission: a task already in the workload (e.g. a
             # replayed scenario whose arrival joined permanently in an
             # earlier run on this scheduler) is simply part of it
             known = {t.task_id for t in domain.tasks}
-            arrived = [t for t in arrived if t.task_id not in known]
+            offered_timed = [(at, t) for at, t in offered_timed
+                             if t.task_id not in known]
+            round_shed = 0
+            round_kv_headroom = math.inf
+            if admission is None:
+                joined = offered_timed
+            else:
+                # refresh the fleet signals the queue bound derives from
+                # (service rates memoed on the model generation; remaining
+                # capacity from pages held by tasks still in flight)
+                alive_set = {pn for pn in names if alive[pn]}
+                if rates_version != sched.models_version:
+                    unit_rates = predicted_unit_rates(sched.models, alive_set)
+                    rates_version = sched.models_version
+                cap_rem: dict[str, float] = {}
+                active_now = {tid for (_pn, tid), q in quotas.items() if q > 0}
+                for p in domain.platforms:
+                    pname = domain.platform_name(p)
+                    if pname not in alive_set:
+                        continue
+                    held = sum(domain.resource_per_unit(p, t)
+                               * done_pair.get((pname, t.task_id), 0.0)
+                               for t in domain.tasks
+                               if t.task_id in active_now)
+                    cap_rem[pname] = domain.platform_capacity(p) - held
+                round_kv_headroom = min(cap_rem.values(), default=math.inf)
+                pool = [t for _at, t in offered_timed] + \
+                       [t for _at, t, _c in admission.pending]
+                mean_q = (sum(domain.task_quality(t) for t in pool)
+                          / len(pool)) if pool else 1.0
+                alive_plats = [p for p in domain.platforms
+                               if domain.platform_name(p) in alive_set]
+                mean_res = (max(domain.resource_per_unit(p, pool[0])
+                                for p in alive_plats) * mean_q
+                            if pool and alive_plats else 0.0)
+                admission.update_fleet(unit_rates, cap_rem, mean_q, mean_res)
+                span = elapsed - round_t0
+                admission.observe_utilisation(round_busy, span,
+                                              len(alive_set))
+                for at, t in offered_timed:
+                    tq = domain.task_quality(t)
+                    fits = any(
+                        domain.resource_per_unit(p, t) * tq
+                        <= domain.platform_capacity(p) for p in alive_plats)
+                    rej = admission.offer(t, at, round_idx,
+                                          cost_s=admission.cost_s(tq),
+                                          fits=fits)
+                    if rej is not None:
+                        shed_events.append(rej.event)
+                        round_shed += 1
+                backlog_s = admission.cost_s(
+                    sum(q for q in quotas.values() if q > 0))
+                joined, timed_out = admission.admit(elapsed, round_idx,
+                                                    backlog_s)
+                for rej in timed_out:
+                    shed_events.append(rej.event)
+                    round_shed += 1
+            arrived = [t for _at, t in joined]
+            for at, t in joined:
+                arr_t[t.task_id] = min(at, elapsed)
             if arrived:
                 n_arrivals += len(arrived)
                 domain.tasks.extend(arrived)
@@ -842,9 +1125,17 @@ class OnlineScheduler:
                 # solver
                 survivors = [p for p in domain.platforms
                              if alive[domain.platform_name(p)]]
-                sched.characterise_tasks(arrived, mode=mode,
-                                         platforms=survivors,
-                                         **(characterise_kw or {}))
+                need_char = arrived
+                if cfg.adopt_family_models:
+                    # trace-scale arrival counts cannot afford a benchmark
+                    # ladder per arrival: same-family newcomers inherit a
+                    # donor's fitted models; only true orphans benchmark
+                    need_char = sched.adopt_models(arrived,
+                                                   platforms=survivors)
+                if need_char:
+                    sched.characterise_tasks(need_char, mode=mode,
+                                             platforms=survivors,
+                                             **(characterise_kw or {}))
                 for t in arrived:
                     for p in domain.platforms:
                         key = (domain.platform_name(p), t.task_id)
@@ -861,20 +1152,56 @@ class OnlineScheduler:
                 A_full = np.pad(A_full,
                                 ((0, 0), (0, len(domain.tasks) - A_full.shape[1])))
 
+            # -- brownout guardrail: walk the degradation ladder when the
+            # recent guardrail quantile breaches the SLO, restore a rung
+            # when pressure clears (hysteresis via enter/exit ratios).
+            # Deepening waits for fresh completions so one bad window does
+            # not ratchet straight to the bottom rung.
+            brown_changed = False
+            if (slo_tracker is not None and cfg.degrade_steps
+                    and cfg.slo is not None):
+                recent = slo_tracker.recent_quantile()
+                if recent is not None:
+                    tgt = cfg.slo.target_s
+                    if (recent > tgt * cfg.slo.enter_ratio
+                            and brown_rung < len(cfg.degrade_steps)
+                            and completions > 0):
+                        brownout_transitions.append(BrownoutTransition(
+                            round=round_idx, at=elapsed,
+                            rung_from=brown_rung, rung_to=brown_rung + 1,
+                            direction="deepen", observed=recent,
+                            target_s=tgt))
+                        brown_rung += 1
+                        brown_changed = True
+                    elif recent < tgt * cfg.slo.exit_ratio and brown_rung > 0:
+                        brownout_transitions.append(BrownoutTransition(
+                            round=round_idx, at=elapsed,
+                            rung_from=brown_rung, rung_to=brown_rung - 1,
+                            direction="restore", observed=recent,
+                            target_s=tgt))
+                        brown_rung -= 1
+                        brown_changed = True
+
             drifted = detector.drifted(alive)
+            tail_drifted = tail.drifted(alive) if tail is not None else ()
             outcome = None
             resolved = False
-            if drifted or newly_dead or arrived or revived:
+            if (drifted or tail_drifted or newly_dead or arrived or revived
+                    or brown_changed):
                 # arrivals-only rounds take the O(k) incremental path: no
                 # drift means the old tasks' models are still right, so
                 # the re-fit is skipped and only the k new columns solve —
                 # the committed shares are the patch's fixed base
                 patch_tids = None
                 if (cfg.patch_arrivals and arrived
-                        and not (drifted or newly_dead or revived)):
+                        and not (drifted or tail_drifted or newly_dead
+                                 or revived or brown_changed)):
                     patch_tids = {t.task_id for t in arrived}
                 else:
                     self._heal_unreachable(alive, mode, characterise_kw)
+                    # only the median detector's verdict re-projects stale
+                    # windows — a blown tail with a quiet median means the
+                    # *spread* changed, not the level
                     self._refit(windows, detector, drifted, alive,
                                 solve_models)
                     n_refits += 1
@@ -885,14 +1212,20 @@ class OnlineScheduler:
                 # a revived platform has zero share in the incumbent by
                 # construction, so the warm-start shortcut would wave the
                 # old allocation through and the re-admitted platform
-                # would never see work again — force a real solve
-                alloc2, A2, quotas2, rung = self._solve_degraded(
-                    quality, rung, method, solver_kw, alive, done,
+                # would never see work again — force a real solve.
+                # The effective rung is the deeper of the monotone
+                # (capacity/deadline) rung and the reversible brownout rung.
+                eff_rung = max(rung, brown_rung)
+                alloc2, A2, quotas2, solved_rung = self._solve_degraded(
+                    quality, eff_rung, method, solver_kw, alive, done,
                     incumbent_A=None if revived else A_full,
                     elapsed=plat_lat,
                     done_pair=done_pair, active_tids=active_tids,
                     round_idx=round_idx, degradations=degradations,
                     patch_tids=patch_tids)
+                if solved_rung > eff_rung:
+                    # forced (capacity/deadline) degradation stays monotone
+                    rung = solved_rung
                 dt = time.perf_counter() - solve_t0
                 resolve_wall += dt
                 solve_wall += dt
@@ -918,15 +1251,29 @@ class OnlineScheduler:
                     quotas = {}
                 solve_models = dict(sched.models)
                 detector.reset()
+                if tail is not None:
+                    tail.reset()
 
+            brown_occupancy[brown_rung] = brown_occupancy.get(brown_rung, 0) + 1
             rounds.append(RoundLog(
                 round=round_idx, dispatched_units=dispatched,
                 drifted=drifted, failed=tuple(failed), arrivals=len(arrived),
                 resolved=resolved, solve_outcome=outcome,
-                revived=tuple(revived)))
+                revived=tuple(revived),
+                tail_drifted=tail_drifted,
+                offered=len(offered_timed),
+                shed=round_shed,
+                queue_depth=admission.queue_depth if admission else 0,
+                backlog_units=float(sum(q for q in quotas.values() if q > 0)),
+                brownout_rung=brown_rung,
+                completions=completions,
+                t=max(plat_lat.values(), default=0.0),
+                kv_headroom=round_kv_headroom))
 
         else:
-            if any(q > 0 for q in quotas.values()):
+            if any(q > 0 for q in quotas.values()) and not cfg.open_loop:
+                # open-loop runs are horizon-truncated, not drained: hitting
+                # the round cap with work in flight just ends the trace
                 raise RuntimeError(
                     f"online run exceeded max_rounds={cfg.max_rounds} with "
                     f"work remaining — no progress on "
@@ -935,7 +1282,8 @@ class OnlineScheduler:
         # summarise against the final (possibly degraded) quality targets —
         # predicted CI / requested tokens must reflect what the run was
         # actually asked to deliver after the ladder stepped down
-        problem = sched.problem(self._effective_quality(quality, rung))
+        problem = sched.problem(
+            self._effective_quality(quality, max(rung, brown_rung)))
         return OnlineReport(
             allocation=alloc,
             predicted_makespan=predicted0,
@@ -963,4 +1311,12 @@ class OnlineScheduler:
             recovered_platforms=tuple(sorted(recovered)),
             n_patched=n_patched,
             solve_metas=solve_metas,
+            shed_events=shed_events,
+            brownout_transitions=brownout_transitions,
+            n_offered=admission.n_offered if admission else n_arrivals,
+            n_shed=admission.n_shed if admission else 0,
+            brownout_rung=brown_rung,
+            brownout_occupancy=brown_occupancy,
+            slo=slo_tracker.snapshot() if slo_tracker else None,
+            task_metrics=task_metrics,
         )

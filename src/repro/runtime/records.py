@@ -20,6 +20,7 @@ import dataclasses
 import importlib
 import json
 import os
+import warnings
 from typing import Any, Iterable, Sequence
 
 __all__ = ["dump_records", "load_records", "group_records",
@@ -34,6 +35,9 @@ _BUILTIN: dict[str, str] = {
     "FaultEvent": "repro.runtime.faults:FaultEvent",
     "DegradationEvent": "repro.runtime.faults:DegradationEvent",
     "BreakerTransition": "repro.runtime.faults:BreakerTransition",
+    # overload-control audit trails (shedding / brownout guardrail)
+    "ShedEvent": "repro.runtime.admission:ShedEvent",
+    "BrownoutTransition": "repro.runtime.admission:BrownoutTransition",
 }
 
 _REGISTRY: dict[str, type] = {}
@@ -80,16 +84,36 @@ def dump_records(records: Iterable[Any], path: str | os.PathLike) -> int:
 
 
 def load_records(path: str | os.PathLike) -> list[Any]:
-    """Load a JSONL record dump back into typed record objects."""
-    out: list[Any] = []
+    """Load a JSONL record dump back into typed record objects.
+
+    A truncated *final* line — the signature of a crash or overload kill
+    mid-``dump_records`` — is tolerated: the intact prefix is returned
+    with a :class:`UserWarning` so post-crash replay always works.
+    Malformed lines anywhere else still raise, because those indicate
+    corruption rather than a torn tail.
+    """
     with open(path) as fh:
-        for line in fh:
-            line = line.strip()
-            if not line:
-                continue
+        lines = fh.readlines()
+    last = len(lines) - 1
+    while last >= 0 and not lines[last].strip():
+        last -= 1
+    out: list[Any] = []
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
             row = json.loads(line)
-            cls = _resolve(row.pop("kind"))
-            out.append(cls(**row))
+        except json.JSONDecodeError:
+            if i == last:
+                warnings.warn(
+                    f"{os.fspath(path)}: discarding truncated final JSONL "
+                    f"line ({len(line)} bytes); returning the "
+                    f"{len(out)}-record intact prefix", stacklevel=2)
+                break
+            raise
+        cls = _resolve(row.pop("kind"))
+        out.append(cls(**row))
     return out
 
 

@@ -263,14 +263,32 @@ class Scenario:
         the workload drains before the clock reaches the stragglers (there
         is no more work to advance virtual time, so they join immediately).
         """
+        return [task for _, task in self.take_arrivals_timed(t, force)]
+
+    def take_arrivals_timed(self, t: float,
+                            force: bool = False) -> list[tuple[float, Any]]:
+        """Like :meth:`take_arrivals`, keeping each task's nominal arrival
+        time — admission control and SLO accounting (TTFT, queueing delay)
+        need when the request *arrived*, not when the loop noticed it."""
         out = []
         while self._admitted < len(self._arrivals):
             nxt = self._arrivals[self._admitted]
             if not force and nxt.time > t:
                 break
-            out.append(nxt.task)
+            out.append((nxt.time, nxt.task))
             self._admitted += 1
         return out
+
+    @property
+    def next_arrival_time(self) -> float | None:
+        """Arrival time of the next still-queued task (None when drained).
+
+        Open-loop runs idle-advance their clock floor to this instant when
+        all admitted work is done but the trace has more to offer.
+        """
+        if self._admitted < len(self._arrivals):
+            return self._arrivals[self._admitted].time
+        return None
 
     @property
     def pending_arrivals(self) -> int:

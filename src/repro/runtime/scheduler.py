@@ -196,6 +196,51 @@ class Scheduler:
         if platforms is None:
             self._delta, self._gamma = self.model_matrices()
 
+    def adopt_models(self, tasks: Sequence[Any],
+                     platforms: Sequence[Any] | None = None) -> list:
+        """Adopt fitted models for arrivals from same-family incumbents.
+
+        Open-loop traces deliver hundreds of arrivals from a handful of
+        request families; benchmarking every one from scratch
+        (``characterise_tasks``) would cost more than serving it.  A task
+        whose launch key matches an already-characterised *donor* task
+        shares the donor's per-platform metric models (the launch key is
+        the compile unit — same family, same eq. 7 coefficients) and gets
+        the donor's characterise records re-tagged under its own id so
+        offline replay still fits the same models.  Returns the orphans —
+        tasks with no same-family donor — which the caller must
+        characterise for real.  Matrices are *not* rebuilt here; callers
+        batch that with their placeholder fill (same contract as
+        ``characterise_tasks(platforms=...)``).
+        """
+        assert self.models is not None, "characterise() first"
+        sweep = self.platforms if platforms is None else list(platforms)
+        donors: dict[Hashable, int] = {}
+        new_ids = {t.task_id for t in tasks}
+        for t in self.tasks:
+            if t.task_id not in new_ids:
+                donors.setdefault(self.domain.launch_key(t), t.task_id)
+        orphans: list = []
+        adopted = False
+        for t in tasks:
+            donor_id = donors.get(self.domain.launch_key(t))
+            if donor_id is None:
+                orphans.append(t)
+                continue
+            for p in sweep:
+                pname = self.domain.platform_name(p)
+                model = self.models.get((pname, donor_id))
+                if model is None:
+                    continue
+                self.models[(pname, t.task_id)] = model
+                recs = self.characterise_records.get((pname, donor_id), [])
+                self.characterise_records[(pname, t.task_id)] = [
+                    dataclasses.replace(r, task_id=t.task_id) for r in recs]
+            adopted = True
+        if adopted:
+            self.models_version += 1
+        return orphans
+
     def refit(self, windows: dict[tuple[str, int], Sequence[RunRecordLike]]) -> None:
         """Fold execute-time records back into the metric models.
 

@@ -22,6 +22,7 @@ from repro.runtime import (
     OnlineScheduler,
     Scenario,
     Scheduler,
+    TailDriftDetector,
     dump_records,
     group_records,
     load_records,
@@ -177,6 +178,45 @@ def test_drift_detector_needs_min_records():
     det.observe("a", 1.0, 4.0)
     det.observe("a", 1.0, 4.0)
     assert det.drifted() == ()
+
+
+@pytest.mark.parametrize("det_cls,ratio_of", [
+    (DriftDetector, "median_ratio"),
+    (TailDriftDetector, "tail_ratio"),
+])
+def test_detector_empty_window_is_neutral(det_cls, ratio_of):
+    """Both the median and the p99 detector answer ratio 1.0 / error 0.0
+    on a platform they have never observed — never nan, never a fire."""
+    det = det_cls()
+    assert getattr(det, ratio_of)("ghost") == 1.0
+    assert det.error("ghost") == 0.0
+    assert det.drifted() == ()
+
+
+@pytest.mark.parametrize("det_cls,ratio_of", [
+    (DriftDetector, "median_ratio"),
+    (TailDriftDetector, "tail_ratio"),
+])
+def test_detector_single_record_window(det_cls, ratio_of):
+    det = det_cls(window=8, threshold=0.5, min_records=3)
+    det.observe("a", predicted=1.0, measured=3.0)
+    assert getattr(det, ratio_of)("a") == pytest.approx(3.0)
+    assert det.error("a") == pytest.approx(2.0)
+    # one record is below min_records: no verdict yet
+    assert det.drifted() == ()
+
+
+def test_tail_detector_fires_on_spread_not_level():
+    """A p99 blowup with a quiet median: the tail detector fires while
+    the median detector stays silent — the overload signature."""
+    med = DriftDetector(window=16, threshold=0.5, min_records=8)
+    tail = TailDriftDetector(window=16, threshold=1.0, min_records=8)
+    for i in range(16):
+        measured = 5.0 if i % 8 == 7 else 1.0   # rare straggler
+        med.observe("a", predicted=1.0, measured=measured)
+        tail.observe("a", predicted=1.0, measured=measured)
+    assert med.drifted() == ()
+    assert tail.drifted() == ("a",)
 
 
 # ------------------------------------------------- the online loop
@@ -434,6 +474,28 @@ def test_records_jsonl_roundtrip_characterise_and_lm(tmp_path):
     loaded = load_records(path)
     assert loaded == mixed
     assert isinstance(loaded[-1], ServeRecord)
+
+
+def test_load_records_tolerates_truncated_final_line(tmp_path):
+    """A crash mid-append tears the last JSONL line; loading warns and
+    returns the intact prefix instead of losing the whole file."""
+    from repro.domains.lm_serving import ServeRecord
+
+    records = [ServeRecord("Cloud Pod", i, 16, 0.25 + i,
+                           prefill_latency=0.01) for i in range(4)]
+    path = tmp_path / "torn.jsonl"
+    dump_records(records, path)
+    text = path.read_text()
+    torn = text.rstrip("\n")[:-10]          # tear the final record mid-JSON
+    path.write_text(torn)
+    with pytest.warns(UserWarning, match="truncated final JSONL line"):
+        loaded = load_records(path)
+    assert loaded == records[:-1]
+    # a torn line in the *middle* is real corruption and still raises
+    lines = text.splitlines()
+    path.write_text("\n".join([lines[0], lines[1][:-10]] + lines[2:]) + "\n")
+    with pytest.raises(Exception):
+        load_records(path)
 
 
 def test_records_replay_refits_same_models(tmp_path):

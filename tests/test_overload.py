@@ -1,0 +1,430 @@
+"""Overload robustness: trace-driven open-loop load, bounded admission,
+SLO guardrails, and the brownout ladder.
+
+The headline A/B (the PR's acceptance criterion): at 2x offered load
+over measured capacity, the guarded run (admission + SLO brownout)
+keeps its dispatch backlog bounded, sheds the excess with typed,
+persistable events, and holds the p99 end-to-end latency of *admitted*
+requests inside the SLO — while the control run (admission disabled)
+shows monotonically growing backlog and a p99 far past the target.
+Identical seeds reproduce identical shed/degrade/record streams in
+concurrent and sequential executor modes.
+
+Everything is calibrated at test time against a *measured* closed-loop
+task rate, not the fitted models' optimistic token rates: at smoke
+scale the per-dispatch constant (gamma) dominates real throughput, so
+"2x capacity" must mean 2x what the fleet actually sustains.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core.slo import SLOConfig
+from repro.domains.lm_serving import (
+    LMRequest,
+    SimulatedLMPlatform,
+    kv_bytes_per_token,
+)
+from repro.runtime import (
+    AdmissionConfig,
+    AdmissionController,
+    BrownoutTransition,
+    OnlineConfig,
+    OnlineScheduler,
+    PlatformSpec,
+    Scheduler,
+    ShedEvent,
+    dump_records,
+    load_records,
+    make_domain,
+    predicted_unit_rates,
+)
+from repro.runtime.faults import CLOSED, HALF_OPEN, OPEN
+from repro.runtime.loadgen import (
+    BurstyRate,
+    ConstantRate,
+    DiurnalRate,
+    LoadGenerator,
+    lm_request_factory,
+)
+
+MEAN_TOK = 12.0
+QUEUE_TASKS = 40
+
+
+def _seed_requests():
+    # one seed task per trace family so arrivals adopt fitted models
+    return [
+        LMRequest("qwen25_3b", prompt_len=8, gen_tokens=16, batch=1,
+                  max_new_tokens=64, task_id=0),
+        LMRequest("qwen25_3b", prompt_len=16, gen_tokens=16, batch=1,
+                  max_new_tokens=64, task_id=1),
+    ]
+
+
+def _specs(per):
+    return [
+        PlatformSpec("Edge", "CPU", "sim", "loc", 4.0, 0.2,
+                     mem_bytes=per * 72 * 120),
+        PlatformSpec("Rack", "GPU", "sim", "loc", 20.0, 1.0,
+                     mem_bytes=per * 72 * 240),
+        PlatformSpec("Big", "GPU", "sim", "loc", 80.0, 5.0,
+                     mem_bytes=per * 72 * 480),
+    ]
+
+
+@pytest.fixture(scope="module")
+def task_rate():
+    """Closed-loop calibration: tasks/sec the fleet actually sustains."""
+    n = 40
+    reqs = [LMRequest("qwen25_3b", prompt_len=(8, 16)[i % 2],
+                      gen_tokens=int(MEAN_TOK), batch=1,
+                      max_new_tokens=64, task_id=i)
+            for i in range(n)]
+    per = kv_bytes_per_token(reqs[0].config(), 1)
+    fleet = [SimulatedLMPlatform(s, seed=0) for s in _specs(per)]
+    sched = Scheduler(make_domain("lm_serving", reqs, fleet))
+    sched.characterise(seed=1, token_ladder=(2, 4, 8, 16))
+    rep = sched.execute(sched.allocate(method="heuristic"))
+    busy: dict[str, float] = {}
+    for r in rep.records:
+        busy[r.platform] = busy.get(r.platform, 0.0) + abs(r.latency)
+    return n / max(busy.values())
+
+
+def _run_trace(ratio, task_rate, *, guarded, seed=0, n_target=600,
+               mode=None, rate_fn=None, scenario_hook=None,
+               target_scale=3.0, degrade_steps=(0.75, 0.5), rounds=60):
+    """One open-loop serving run against a seeded trace."""
+    reqs = _seed_requests()
+    per = kv_bytes_per_token(reqs[0].config(), 1)
+    fleet = [SimulatedLMPlatform(s, seed=0) for s in _specs(per)]
+    sched = Scheduler(make_domain("lm_serving", reqs, fleet))
+    sched.characterise(seed=1, token_ladder=(2, 4, 8, 16))
+
+    R = sum(predicted_unit_rates(sched.models,
+                                 typical_units=MEAN_TOK).values())
+    lam = ratio * task_rate
+    horizon = n_target / lam
+    queue_s = QUEUE_TASKS * MEAN_TOK / R     # predicted-cost queue budget
+    target = target_scale * QUEUE_TASKS / task_rate   # in real drain time
+
+    factory = lm_request_factory(archs=("qwen25_3b",),
+                                 prompt_buckets=(8, 16),
+                                 batch=1, max_new_tokens=64)
+    gen = LoadGenerator(rate_fn or ConstantRate(lam), factory,
+                        seed=seed, start_id=1000)
+    scenario = gen.scenario(horizon)
+    if scenario_hook is not None:
+        scenario_hook(scenario, horizon)
+    for p in fleet:
+        p.attach_scenario(scenario)
+
+    cfg = OnlineConfig(
+        rounds=rounds, gamma_duty=0.0, open_loop=True,
+        adopt_family_models=True,
+        admission=AdmissionConfig(queue_s=queue_s,
+                                  max_wait_s=target) if guarded else None,
+        slo=SLOConfig(target_s=target, metric="e2e", quantile=0.99,
+                      window=32, min_window=8) if guarded else None,
+        degrade_steps=degrade_steps if guarded else (),
+        breaker_cooldown=horizon * 0.15)
+    rep = OnlineScheduler(sched, cfg).run(method="heuristic", seed=3,
+                                          mode=mode, scenario=scenario)
+    return rep, dict(queue_s=queue_s, target=target, horizon=horizon,
+                     lam=lam)
+
+
+def _p99(rep):
+    e2e = sorted(m["e2e"] for m in rep.task_metrics.values())
+    return e2e[max(int(len(e2e) * 0.99) - 1, 0)]
+
+
+# --------------------------------------------------------------------------
+# load generator determinism and shapes
+# --------------------------------------------------------------------------
+
+def test_loadgen_same_seed_reproduces_identical_trace():
+    factory = lm_request_factory()
+    a = LoadGenerator(ConstantRate(50.0), factory, seed=4).arrivals(2.0)
+    b = LoadGenerator(ConstantRate(50.0), factory, seed=4).arrivals(2.0)
+    c = LoadGenerator(ConstantRate(50.0), factory, seed=5).arrivals(2.0)
+    assert [(t, r) for t, r in a] == [(t, r) for t, r in b]
+    assert a != c
+    assert all(0.0 <= t <= 2.0 for t, _ in a)
+    assert [t for t, _ in a] == sorted(t for t, _ in a)
+
+
+def test_loadgen_rate_curves_shape_the_trace():
+    factory = lm_request_factory()
+    lam = 200.0
+    flat = LoadGenerator(ConstantRate(lam), factory, seed=0).arrivals(1.0)
+    assert len(flat) == pytest.approx(lam, rel=0.3)
+
+    burst = BurstyRate(base_per_s=10.0, burst_per_s=500.0,
+                       period_s=1.0, duty=0.2)
+    b = LoadGenerator(burst, factory, seed=0).arrivals(1.0)
+    in_burst = sum(1 for t, _ in b if t < 0.2)
+    assert in_burst > 0.7 * len(b)           # the burst window dominates
+
+    diurnal = DiurnalRate(base_per_s=lam, amplitude=0.9, period_s=1.0)
+    d = LoadGenerator(diurnal, factory, seed=0).arrivals(1.0)
+    first, second = (sum(1 for t, _ in d if (t < 0.5) == half)
+                     for half in (True, False))
+    assert first > 2 * second                # peak half vs trough half
+
+
+def test_loadgen_requests_are_heavy_tailed_and_family_tagged():
+    factory = lm_request_factory(archs=("qwen25_3b",),
+                                 prompt_buckets=(8, 16), tail_alpha=1.3)
+    trace = LoadGenerator(ConstantRate(500.0), factory, seed=2).arrivals(2.0)
+    reqs = [r for _, r in trace]
+    assert {r.prompt_len for r in reqs} == {8, 16}
+    toks = sorted(r.gen_tokens for r in reqs)
+    assert toks[0] >= 4 and toks[-1] <= 64   # bounded-Pareto support
+    assert toks[-1] > 3 * toks[len(toks) // 2]   # a real tail
+    ids = [r.task_id for r in reqs]
+    assert len(set(ids)) == len(ids)
+
+
+def test_loadgen_scenario_feeds_existing_scenario_object():
+    factory = lm_request_factory()
+    gen = LoadGenerator(ConstantRate(100.0), factory, seed=0)
+    sc = gen.scenario(1.0)
+    n = len(gen.arrivals(1.0))
+    assert len(sc.take_arrivals(math.inf, force=True)) == n
+
+
+# --------------------------------------------------------------------------
+# admission controller unit behaviour
+# --------------------------------------------------------------------------
+
+def _mk_task(tid):
+    return LMRequest("qwen25_3b", prompt_len=8, gen_tokens=8, batch=1,
+                     max_new_tokens=64, task_id=tid)
+
+
+def test_admission_queue_bound_from_rate_and_capacity():
+    ac = AdmissionController(AdmissionConfig(queue_s=2.0))
+    # fast fleet, roomy capacity: rate bound wins (100/s * 2 s / 10 units)
+    ac.update_fleet({"a": 100.0}, {"a": 1e9}, task_units=10.0,
+                    task_resource=1.0)
+    assert ac.queue_limit == 20
+    # same rate, tight capacity: capacity bound wins (5 footprints left)
+    ac.update_fleet({"a": 100.0}, {"a": 50.0}, task_units=10.0,
+                    task_resource=10.0)
+    assert ac.queue_limit == 5
+    # dead fleet still has a floor of 1 (never a zero-size queue)
+    ac.update_fleet({"a": 0.0}, {"a": 0.0}, task_units=10.0,
+                    task_resource=10.0)
+    assert ac.queue_limit == 1
+
+
+def test_admission_sheds_queue_full_and_capacity_with_typed_events():
+    ac = AdmissionController(AdmissionConfig(queue_s=1.0, max_queue=2))
+    ac.update_fleet({"a": 100.0}, {"a": 1e9}, 10.0, 1.0)
+    assert ac.offer(_mk_task(1), t=0.0, round_idx=0, cost_s=0.1,
+                    fits=True) is None
+    assert ac.offer(_mk_task(2), t=0.0, round_idx=0, cost_s=0.1,
+                    fits=True) is None
+    rej = ac.offer(_mk_task(3), t=0.1, round_idx=0, cost_s=0.1, fits=True)
+    assert rej.event.reason == "queue-full" and rej.event.queue_depth == 2
+    rej = ac.offer(_mk_task(4), t=0.2, round_idx=1, cost_s=0.1, fits=False)
+    assert rej.event.reason == "capacity" and rej.event.round == 1
+    assert ac.n_offered == 4 and ac.n_shed == 2
+
+
+def test_admission_backpressure_shrinks_budget_and_timeout_sheds():
+    cfg = AdmissionConfig(queue_s=1.0, util_high=0.5,
+                          backpressure_factor=0.5, max_wait_s=1.0,
+                          ewma_alpha=1.0)
+    ac = AdmissionController(cfg)
+    ac.update_fleet({"a": 10.0}, {"a": 1e9}, 1.0, 1.0)
+    for i in range(6):
+        ac.offer(_mk_task(i), t=0.0, round_idx=0, cost_s=0.25, fits=True)
+    # idle fleet: full 1.0 s budget admits four 0.25 s tasks, two wait
+    admitted, timed_out = ac.admit(now=0.5, round_idx=0, backlog_s=0.0)
+    assert len(admitted) == 4 and not timed_out
+    assert ac.queue_depth == 2
+    # saturated fleet: the budget halves, so the same two queued tasks
+    # would have fit before but only two 0.25 s costs fit under 0.5 s
+    ac.observe_utilisation(busy_s=10.0, span_s=10.0, n_platforms=1)
+    ac.offer(_mk_task(10), t=0.6, round_idx=1, cost_s=0.3, fits=True)
+    admitted, _ = ac.admit(now=0.7, round_idx=1, backlog_s=0.0)
+    assert len(admitted) == 2 and ac.queue_depth == 1
+    # the leftover ages past max_wait_s and sheds as a timeout
+    admitted, timed_out = ac.admit(now=5.0, round_idx=2, backlog_s=9.9)
+    assert not admitted
+    assert [r.event.reason for r in timed_out] == ["timeout"]
+
+
+def test_predicted_unit_rates_amortise_gamma_and_skip_placeholders():
+    class _Lat:
+        def __init__(self, beta, gamma):
+            self.beta, self.gamma = beta, gamma
+
+    class _M:
+        def __init__(self, beta, gamma):
+            self.latency = _Lat(beta, gamma)
+
+    models = {
+        ("fast", 0): _M(1e-12, 0.1),      # RTT-bound: rate ~= u/gamma
+        ("slow", 0): _M(0.5, 0.0),
+        ("dead", 0): _M(1e9, 1e9),        # unreachable placeholder
+    }
+    rates = predicted_unit_rates(models, alive=("fast", "slow", "dead"),
+                                 typical_units=10.0)
+    assert rates["fast"] == pytest.approx(100.0, rel=1e-6)
+    assert rates["slow"] == pytest.approx(2.0)
+    assert rates["dead"] == 0.0           # no finite model -> no headroom
+
+
+# --------------------------------------------------------------------------
+# the 2x overload A/B — the PR's acceptance criterion
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_overload_guarded_bounds_backlog_and_holds_slo(task_rate):
+    guarded, g = _run_trace(2.0, task_rate, guarded=True)
+    control, c = _run_trace(2.0, task_rate, guarded=False)
+
+    # the control run admits everything and its backlog diverges: while
+    # the trace is still offering load (round t inside the horizon) the
+    # backlog grows monotonically, peaking far above the guarded plateau
+    g_back = [r.backlog_units for r in guarded.rounds]
+    c_active = [r.backlog_units for r in control.rounds
+                if r.t <= c["horizon"]]
+    assert max(c_active) > 4 * max(g_back)
+    tail = c_active[-4:]
+    assert all(a < b for a, b in zip(tail, tail[1:])), tail
+
+    # guarded: bounded queue, deterministic typed sheds, SLO held
+    assert guarded.n_shed > 0
+    assert guarded.shed_fraction == pytest.approx(0.5, abs=0.25)
+    assert all(ev.reason in ("queue-full", "capacity", "timeout")
+               for ev in guarded.shed_events)
+    limit = max(r.queue_depth for r in guarded.rounds)
+    assert limit <= 3 * QUEUE_TASKS
+    assert _p99(guarded) <= g["target"]
+    assert guarded.slo["attainment"] >= 0.95
+    # control blows straight through the same target
+    assert _p99(control) > g["target"]
+    assert control.n_shed == 0 and not control.shed_events
+
+    # offered arrivals are conserved: admitted + shed == offered
+    assert guarded.n_offered == guarded.arrivals + guarded.n_shed
+    assert control.n_offered == control.arrivals
+
+    # the admission barrier's KV audit never went negative: no platform
+    # was ever committed past its cache budget
+    assert min(r.kv_headroom for r in guarded.rounds) >= 0.0
+
+
+@pytest.mark.slow
+def test_overload_streams_are_deterministic_across_modes(task_rate):
+    seq, _ = _run_trace(2.0, task_rate, guarded=True, mode="sequential",
+                        n_target=300)
+    conc, _ = _run_trace(2.0, task_rate, guarded=True, mode="concurrent",
+                         n_target=300)
+    again, _ = _run_trace(2.0, task_rate, guarded=True, mode="sequential",
+                          n_target=300)
+    assert seq.mode == "sequential" and conc.mode == "concurrent"
+    assert seq.records == conc.records == again.records
+    assert seq.shed_events == conc.shed_events == again.shed_events
+    assert (seq.brownout_transitions == conc.brownout_transitions
+            == again.brownout_transitions)
+    assert seq.task_metrics == conc.task_metrics
+    assert seq.slo == conc.slo
+
+
+@pytest.mark.slow
+def test_shed_and_brownout_events_round_trip_jsonl(tmp_path, task_rate):
+    rep, _ = _run_trace(2.0, task_rate, guarded=True, n_target=300,
+                        target_scale=1.2)
+    assert rep.shed_events and rep.brownout_transitions
+    path = tmp_path / "events.jsonl"
+    events = rep.shed_events + rep.brownout_transitions
+    dump_records(events, path)
+    loaded = load_records(path)
+    assert loaded == events
+    assert all(isinstance(e, (ShedEvent, BrownoutTransition))
+               for e in loaded)
+
+
+# --------------------------------------------------------------------------
+# brownout ladder: deepen under pressure, restore when it clears
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_brownout_deepens_under_sustained_breach(task_rate):
+    # a target tight enough that full-quality p99 cannot meet it
+    rep, _ = _run_trace(2.0, task_rate, guarded=True, n_target=400,
+                        target_scale=1.2)
+    deepens = [t for t in rep.brownout_transitions if t.direction == "deepen"]
+    assert deepens and rep.brownout_rung > 0
+    assert sum(rep.brownout_occupancy.values()) == len(rep.rounds)
+    assert any(rung > 0 for rung in rep.brownout_occupancy)
+    for tr in deepens:
+        assert tr.rung_to == tr.rung_from + 1
+        assert tr.observed > rep.slo["target_s"]
+
+
+@pytest.mark.slow
+def test_brownout_restores_after_burst_clears(task_rate):
+    def bursty(lam):
+        return BurstyRate(base_per_s=0.3 * task_rate,
+                          burst_per_s=3.0 * task_rate,
+                          period_s=900 / task_rate, duty=0.25)
+
+    rep, _ = _run_trace(1.0, task_rate, guarded=True, n_target=900,
+                        target_scale=1.2, rounds=80,
+                        rate_fn=bursty(None))
+    dirs = [t.direction for t in rep.brownout_transitions]
+    assert "deepen" in dirs and "restore" in dirs
+    # the ladder is reversible: every restore steps exactly one rung up
+    for tr in rep.brownout_transitions:
+        if tr.direction == "restore":
+            assert tr.rung_to == tr.rung_from - 1
+
+
+# --------------------------------------------------------------------------
+# circuit-breaker recovery under sustained open-loop load
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sequential", "concurrent"])
+def test_breaker_recovery_arc_under_open_loop_load(task_rate, mode):
+    def outage(scenario, horizon):
+        scenario.outage("Rack", t=horizon * 0.2, end=horizon * 0.45)
+
+    rep, _ = _run_trace(1.2, task_rate, guarded=True, mode=mode,
+                        n_target=500, target_scale=6.0,
+                        scenario_hook=outage)
+    assert rep.recovered_platforms == ("Rack",)
+    arc = [(t.frm, t.to) for t in rep.breaker_transitions
+           if t.platform == "Rack"]
+    assert (CLOSED, OPEN) in arc and (OPEN, HALF_OPEN) in arc
+    assert (HALF_OPEN, CLOSED) in arc
+    # arrivals keep flowing after the platform is re-admitted
+    rec_round = max(t.round for t in rep.breaker_transitions
+                    if t.platform == "Rack" and t.to == CLOSED)
+    assert sum(r.arrivals for r in rep.rounds[rec_round:]) > 0
+
+
+@pytest.mark.slow
+def test_breaker_recovery_record_parity_across_modes(task_rate):
+    def outage(scenario, horizon):
+        scenario.outage("Rack", t=horizon * 0.2, end=horizon * 0.45)
+
+    runs = {}
+    for mode in ("sequential", "concurrent"):
+        rep, _ = _run_trace(1.2, task_rate, guarded=True, mode=mode,
+                            n_target=500, target_scale=6.0,
+                            scenario_hook=outage)
+        runs[mode] = rep
+    seq, conc = runs["sequential"], runs["concurrent"]
+    assert seq.records == conc.records
+    assert seq.shed_events == conc.shed_events
+    assert seq.breaker_transitions == conc.breaker_transitions
+    assert seq.recovered_platforms == conc.recovered_platforms

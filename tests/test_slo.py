@@ -1,0 +1,152 @@
+"""SLO tail-metric layer: exact quantiles, the P-squared streaming
+estimator, and the TTFT/TPOT/e2e tracker.
+
+What is locked down:
+
+- ``quantile`` matches numpy's linear interpolation and returns nan on
+  empty input instead of raising.
+- ``P2Quantile`` is exact below five observations, close to the exact
+  quantile on heavy-tailed streams, and nan (not a crash) when empty —
+  the estimator feeds live dashboards, so short windows must degrade
+  gracefully.
+- ``SLOTracker`` streams three metrics at once, snapshots p50/p95/p99,
+  reports attainment against the configured target, and its recent
+  window answers None (not a bogus number) until ``min_window``
+  completions exist.
+- ``SLOConfig`` validates its metric name and hysteresis ratios.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.slo import P2Quantile, SLOConfig, SLOTracker, quantile
+
+
+# --------------------------------------------------------------------------
+# exact quantile helper
+# --------------------------------------------------------------------------
+
+def test_quantile_matches_numpy_linear_interpolation():
+    rng = np.random.default_rng(0)
+    vals = list(rng.lognormal(0.0, 1.0, size=101))
+    for q in (0.0, 0.25, 0.5, 0.95, 0.99, 1.0):
+        assert quantile(vals, q) == pytest.approx(
+            float(np.quantile(np.asarray(vals), q)))
+
+
+def test_quantile_empty_is_nan_and_singleton_is_identity():
+    assert math.isnan(quantile([], 0.99))
+    assert quantile([3.5], 0.5) == 3.5
+    assert quantile([3.5], 0.99) == 3.5
+
+
+# --------------------------------------------------------------------------
+# P-squared streaming estimator
+# --------------------------------------------------------------------------
+
+def test_p2_empty_is_nan_and_short_windows_are_exact():
+    est = P2Quantile(0.99)
+    assert math.isnan(est.value())
+    seen: list[float] = []
+    for v in (5.0, 1.0, 3.0, 2.0):
+        est.observe(v)
+        seen.append(v)
+        assert est.value() == pytest.approx(quantile(seen, 0.99))
+
+
+def test_p2_tracks_heavy_tailed_stream_within_a_few_percent():
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(0.0, 1.0, size=5000)
+    for q in (0.5, 0.95, 0.99):
+        est = P2Quantile(q)
+        for v in vals:
+            est.observe(float(v))
+        exact = float(np.quantile(vals, q))
+        assert est.value() == pytest.approx(exact, rel=0.05)
+
+
+def test_p2_is_deterministic_and_order_sensitive_only_in_estimate():
+    # same stream -> bitwise same estimate (no hidden randomness)
+    vals = [float(v) for v in np.random.default_rng(1).exponential(1.0, 200)]
+    a, b = P2Quantile(0.95), P2Quantile(0.95)
+    for v in vals:
+        a.observe(v)
+        b.observe(v)
+    assert a.value() == b.value()
+
+
+# --------------------------------------------------------------------------
+# SLOConfig validation
+# --------------------------------------------------------------------------
+
+def test_slo_config_validates_metric_and_ratios():
+    with pytest.raises(ValueError):
+        SLOConfig(target_s=1.0, metric="latency")
+    with pytest.raises(ValueError):
+        SLOConfig(target_s=1.0, exit_ratio=1.5)      # exit above enter
+    with pytest.raises(ValueError):
+        SLOConfig(target_s=0.0)
+    cfg = SLOConfig(target_s=2.0, metric="ttft", exit_ratio=0.5)
+    assert cfg.quantile == 0.99
+
+
+# --------------------------------------------------------------------------
+# SLOTracker
+# --------------------------------------------------------------------------
+
+def test_tracker_snapshot_streams_three_metrics():
+    tr = SLOTracker(SLOConfig(target_s=1.0, metric="e2e"))
+    rng = np.random.default_rng(3)
+    e2es = []
+    for _ in range(300):
+        ttft = float(rng.uniform(0.01, 0.1))
+        tpot = float(rng.uniform(0.001, 0.01))
+        e2e = ttft + 50 * tpot
+        tr.observe(ttft, tpot, e2e)
+        e2es.append(e2e)
+    snap = tr.snapshot()
+    assert snap["count"] == 300
+    assert set(snap["metrics"]) == {"ttft", "tpot", "e2e"}
+    m = snap["metrics"]["e2e"]
+    assert m["p50"] == pytest.approx(float(np.quantile(e2es, 0.5)), rel=0.05)
+    assert m["p99"] == pytest.approx(float(np.quantile(e2es, 0.99)), rel=0.05)
+    assert m["max"] == pytest.approx(max(e2es))
+    # every e2e here is below the 1 s target
+    assert snap["attainment"] == 1.0
+
+
+def test_tracker_attainment_counts_guardrail_metric_only():
+    tr = SLOTracker(SLOConfig(target_s=0.5, metric="ttft"))
+    tr.observe(ttft=0.4, tpot=9.9, e2e=9.9)   # ttft ok, rest terrible
+    tr.observe(ttft=0.6, tpot=0.0, e2e=0.1)   # ttft breaches
+    assert tr.attainment() == pytest.approx(0.5)
+
+
+def test_tracker_recent_quantile_needs_min_window():
+    tr = SLOTracker(SLOConfig(target_s=1.0, window=8, min_window=4))
+    assert tr.recent_quantile() is None          # empty
+    tr.observe(0.1, 0.01, 0.2)
+    assert tr.recent_quantile() is None          # single record
+    for _ in range(3):
+        tr.observe(0.1, 0.01, 0.2)
+    assert tr.recent_quantile() == pytest.approx(0.2)
+
+
+def test_tracker_recent_quantile_slides_with_the_window():
+    tr = SLOTracker(SLOConfig(target_s=1.0, window=4, min_window=4))
+    for _ in range(4):
+        tr.observe(0.1, 0.01, 5.0)               # slow era
+    assert tr.recent_quantile() > 1.0
+    for _ in range(4):
+        tr.observe(0.1, 0.01, 0.2)               # fast era displaces it
+    assert tr.recent_quantile() == pytest.approx(0.2)
+
+
+def test_tracker_empty_snapshot_is_well_formed():
+    tr = SLOTracker(SLOConfig(target_s=1.0))
+    snap = tr.snapshot()
+    assert snap["count"] == 0
+    # nan, not a vacuous 1.0 — an all-shedding system has no attainment
+    assert math.isnan(snap["attainment"])
+    assert math.isnan(snap["metrics"]["e2e"]["p99"])
