@@ -310,6 +310,53 @@ def scaling_section(fast: bool = True) -> dict:
     }
 
 
+def telemetry_section(tasks, moments, fast: bool = True) -> dict:
+    """Observability cost + accountability: instrumented-vs-uninstrumented
+    wall overhead on the canonical online run (min-of-N legs), the
+    instrumented leg's live per-phase prediction-error quantiles, and the
+    emitted trace's validation counts. ``chaos.yml`` asserts overhead
+    < 5% and latency p50 error <= 10% from this section."""
+    import time as _time
+
+    from repro.obs import Tracer, validate_chrome_trace
+    from repro.pricing import SimulatedPlatform, TABLE2_SPECS
+    from repro.runtime import OnlineConfig, OnlineScheduler, Scheduler, make_domain
+
+    def leg(trace):
+        # the timed region is the whole instrumented pipeline —
+        # characterise -> solve -> dispatch -> adapt — on the canonical
+        # instance, which is exactly the surface the tracer covers
+        ps = [SimulatedPlatform(TABLE2_SPECS[i], moments=moments, seed=7)
+              for i in PLATFORM_ROWS]
+        t0 = _time.perf_counter()
+        s = Scheduler(make_domain("pricing", tasks, ps), trace=trace)
+        s.characterise(seed=1, path_ladder=(1_024, 4_096, 16_384, 65_536))
+        OnlineScheduler(s, OnlineConfig(rounds=ONLINE_ROUNDS)).run(
+            ACCURACY, method="milp", seed=3, time_limit=30 if fast else 600)
+        return _time.perf_counter() - t0, s
+
+    reps = 3
+    uninstr = min(leg(False)[0] for _ in range(reps))
+    traced = [leg(Tracer()) for _ in range(reps)]
+    instr = min(w for w, _s in traced)
+    sched = min(traced, key=lambda ws: ws[0])[1]
+    stats = validate_chrome_trace(sched.tracer.chrome_events())
+    overhead = instr / uninstr - 1.0
+    errors = sched.ledger.summary()
+    emit("allocation.telemetry", instr * 1e6,
+         f"overhead={overhead * 100:.2f}%;"
+         f"spans={stats['spans']};"
+         f"lat_p50={errors['latency']['p50']:.3f}")
+    return {
+        "reps": reps,
+        "uninstrumented_wall_s": uninstr,
+        "instrumented_wall_s": instr,
+        "overhead": overhead,
+        "trace": stats,
+        "prediction_error": errors,
+    }
+
+
 def slo_section(fast: bool = True) -> dict:
     """Open-loop overload sweep + the 2x guarded-vs-control A/B.
 
@@ -710,6 +757,9 @@ def main(fast: bool = True) -> None:
     # -- scaling: fleet-size sweep, build speedup, incremental patch ------
     scaling = scaling_section(fast)
 
+    # -- telemetry: tracing overhead + live prediction accountability -----
+    telemetry = telemetry_section(tasks, moments, fast)
+
     payload = {
         "benchmark": "allocation_16x4",
         "instance": {"tasks": N_TASKS, "platforms": len(platforms),
@@ -724,6 +774,7 @@ def main(fast: bool = True) -> None:
         "faults": faults,
         "slo": slo,
         "scaling": scaling,
+        "telemetry": telemetry,
     }
     with open(OUT_PATH, "w") as fh:
         json.dump(payload, fh, indent=2)

@@ -11,6 +11,10 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.obs.log import get_logger  # noqa: E402
+
+log = get_logger("examples.allocate_cluster")
+
 from repro.pricing import PricingSolver, build_cluster, table1_workload  # noqa: E402
 from repro.pricing.workload import TABLE1_CATEGORIES  # noqa: E402
 
@@ -32,10 +36,10 @@ def main():
         cats = [(c, 2) for c, _ in TABLE1_CATEGORIES]
         tasks = table1_workload(n_steps=64, categories=cats)
     cluster = build_cluster(include_local=False)
-    print(f"workload: {len(tasks)} tasks; cluster: {len(cluster)} platforms")
+    log.info(f"workload: {len(tasks)} tasks; cluster: {len(cluster)} platforms")
 
     solver = PricingSolver(tasks, cluster, mode=args.mode)
-    print(f"characterising (online benchmarking, §3.1.4; {args.mode} dispatch)...")
+    log.info(f"characterising (online benchmarking, §3.1.4; {args.mode} dispatch)...")
     solver.characterise()  # adaptive online benchmarking
 
     reports = {}
@@ -46,20 +50,20 @@ def main():
         rep = solver.execute(alloc, args.accuracy)
         reports[method] = rep
         nz = (alloc.A > 1e-9).sum()
-        print(f"\n== {method} ==")
-        print(f"  predicted makespan: {rep.predicted_makespan:10.2f} s")
-        print(f"  measured  makespan: {rep.measured_makespan:10.2f} s "
+        log.info(f"\n== {method} ==")
+        log.info(f"  predicted makespan: {rep.predicted_makespan:10.2f} s")
+        log.info(f"  measured  makespan: {rep.measured_makespan:10.2f} s "
               f"(model error {rep.makespan_error:.1%})")
-        print(f"  allocation support: {nz} (platform,task) pairs; "
+        log.info(f"  allocation support: {nz} (platform,task) pairs; "
               f"solve {alloc.solve_time:.2f}s"
               + (f"; certified optimal (gap<=1e-4)" if alloc.optimal else ""))
 
     h = reports["heuristic"].measured_makespan
-    print("\n== improvement over the proportional heuristic ==")
+    log.info("\n== improvement over the proportional heuristic ==")
     for m in ("ml", "milp"):
-        print(f"  {m:5s}: {h / reports[m].measured_makespan:8.2f}x")
+        log.info(f"  {m:5s}: {h / reports[m].measured_makespan:8.2f}x")
     worst = max(reports["milp"].measured_ci.values())
-    print(f"\nworst achieved CI: ${worst:.4f} (requested ${args.accuracy})")
+    log.info(f"\nworst achieved CI: ${worst:.4f} (requested ${args.accuracy})")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,10 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.obs.log import get_logger  # noqa: E402
+
+log = get_logger("examples.allocate_lm_fleet")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -32,12 +36,12 @@ def main():
     fleet = build_lm_fleet(include_local=not args.no_local)
     sched = Scheduler(make_domain("lm_serving", reqs, fleet), mode=args.mode)
 
-    print(f"characterising {len(fleet)} platforms x {len(reqs)} requests "
+    log.info(f"characterising {len(fleet)} platforms x {len(reqs)} requests "
           f"({args.mode} dispatch) ...")
     sched.characterise(seed=1)
     for (pname, tid), m in sorted(sched.models.items()):
         if tid == reqs[0].task_id:
-            print(f"  {pname:18s} beta={m.latency.beta*1e3:8.3f} ms/tok  "
+            log.info(f"  {pname:18s} beta={m.latency.beta*1e3:8.3f} ms/tok  "
                   f"gamma={m.latency.gamma*1e3:8.3f} ms")
 
     for method, kw in (("heuristic", {}),
@@ -45,13 +49,13 @@ def main():
                        ("milp", dict(time_limit=30))):
         alloc = sched.allocate(method=method, **kw)
         rep = sched.execute(alloc)
-        print(f"{method:9s} predicted={rep.predicted_makespan*1e3:9.2f} ms  "
+        log.info(f"{method:9s} predicted={rep.predicted_makespan*1e3:9.2f} ms  "
               f"measured={rep.measured_makespan*1e3:9.2f} ms  "
               f"err={rep.makespan_error:.1%}  "
               f"wall={rep.wall_s*1e3:7.1f} ms ({rep.mode})")
     served = rep.summary["tokens"]
     asked = rep.summary["requested_tokens"]
-    print("tokens served vs requested:",
+    log.info("tokens served vs requested:",
           {tid: f"{served[tid]}/{int(asked[tid])}" for tid in served})
 
 

@@ -1,0 +1,88 @@
+"""Render a run's span tree + prediction ledger as text.
+
+Two modes:
+
+* ``--trace PATH`` — load an existing Chrome trace-event JSON (e.g. one
+  written by ``REPRO_TRACE=1 python examples/adaptive_cluster.py``),
+  validate it, and print the per-track span tree.
+* default — run a small instrumented pricing smoke workload (three
+  simulated Table 2 platforms, a handful of tasks, a few online rounds),
+  print the span tree *and* the prediction-accountability ledger, and
+  write the trace JSON to ``--out`` (default ``trace_report.json``) for
+  Perfetto (https://ui.perfetto.dev).
+
+Run:  PYTHONPATH=src python examples/trace_report.py [--out trace.json]
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def render_file(path: str) -> int:
+    from repro.obs import render_span_tree, validate_chrome_trace
+
+    with open(path) as fh:
+        doc = json.load(fh)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    stats = validate_chrome_trace(events)
+    print(f"{path}: {stats['events']} events, {stats['spans']} spans, "
+          f"{stats['instants']} instants on {stats['tracks']} tracks")
+    print(render_span_tree(events))
+    return 0
+
+
+def smoke_run(args) -> int:
+    from repro.obs import Tracer, render_span_tree, validate_chrome_trace
+    from repro.pricing import SimulatedPlatform, TABLE2_SPECS, table1_workload
+    from repro.pricing.platforms import _TaskMoments
+    from repro.runtime import OnlineConfig, OnlineScheduler, Scheduler, make_domain
+
+    tasks = table1_workload(seed=2015, n_steps=16)[:args.tasks]
+    moments = _TaskMoments(calib_paths=2048)
+    rows = (0, 9, 14)  # Desktop, Local GPU 1, Local FPGA 1
+    platforms = [SimulatedPlatform(TABLE2_SPECS[i], moments=moments, seed=7)
+                 for i in rows]
+
+    tracer = Tracer(enabled=True)
+    sched = Scheduler(make_domain("pricing", tasks, platforms), trace=tracer)
+    sched.characterise(seed=1, path_ladder=(256, 1024))
+    report = OnlineScheduler(sched, OnlineConfig(rounds=args.rounds)).run(
+        args.accuracy, method=args.method, seed=3, time_limit=10)
+
+    events = tracer.chrome_events()
+    stats = validate_chrome_trace(events)
+    print(f"smoke run: {len(tasks)} tasks x {len(platforms)} platforms, "
+          f"{args.rounds} rounds ({args.method}); measured makespan "
+          f"{report.measured_makespan:.3f}s")
+    print(f"trace: {stats['events']} events, {stats['spans']} spans, "
+          f"{stats['instants']} instants on {stats['tracks']} tracks\n")
+    print(render_span_tree(events))
+    print()
+    print(sched.ledger.render())
+    tracer.write(args.out)
+    print(f"\nwrote {args.out} — open it at https://ui.perfetto.dev")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="",
+                    help="render an existing Chrome trace JSON instead of "
+                         "running the smoke workload")
+    ap.add_argument("--out", default="trace_report.json",
+                    help="where the smoke run writes its trace JSON")
+    ap.add_argument("--tasks", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--accuracy", type=float, default=0.05)
+    ap.add_argument("--method", default="heuristic",
+                    choices=("heuristic", "ml", "milp"))
+    args = ap.parse_args()
+    if args.trace:
+        return render_file(args.trace)
+    return smoke_run(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

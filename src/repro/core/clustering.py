@@ -335,9 +335,15 @@ def clustered_allocation(
     best_m = np.inf
     sub_meta: dict = {}
     sub_solver = method
+    # every gamma-model sub-solve's meta is kept (meta["inner"], one per
+    # model, tagged with which model it solved) — the flattened top level
+    # still mirrors the first for backward compatibility, with phase
+    # timings aggregated across all sub-solves
+    inner_metas: list[dict] = []
     for gamma_model in models:
         reduced_problem = plan.reduce(problem, gamma_model=gamma_model)
         sub = solvers[method](reduced_problem, **solver_kw)
+        inner_metas.append({"gamma_model": gamma_model, **sub.meta})
         if not sub_meta:
             sub_meta, sub_solver = dict(sub.meta), sub.solver
         if expand == "proportional":
@@ -365,8 +371,13 @@ def clustered_allocation(
         solve_time=time.perf_counter() - t0,
         optimal=False,
         bound=None,
-        meta={**sub_meta, "clustered_from": problem.tau,
+        meta={**sub_meta,
+              # aggregate phase timings over every gamma-model sub-solve,
+              # so the lifted spans account the whole clustered solve
+              **{k: sum(float(m.get(k) or 0.0) for m in inner_metas)
+                 for k in ("build_s", "solve_s", "polish_s")},
+              "clustered_from": problem.tau,
               "n_clusters": plan.n_clusters, "cluster_rtol": rtol,
               "cluster_s": cluster_s, "expand_mode": expand,
-              "gamma_models": list(models)},
+              "gamma_models": list(models), "inner": inner_metas},
     )

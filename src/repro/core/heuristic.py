@@ -167,7 +167,10 @@ def incumbent_shortcut(
             A=A_inc.copy(), makespan=makespan(A_inc, problem), solver=solver,
             solve_time=time.perf_counter() - t0, optimal=False,
             meta={"warm_start": "skipped", "warm_tol": warm_tol,
-                  "heuristic_bound": heur_flat.makespan},
+                  "heuristic_bound": heur_flat.makespan,
+                  # phase keys are part of every Allocation.meta contract;
+                  # a skipped solve ran none of them
+                  "build_s": 0.0, "solve_s": 0.0, "polish_s": 0.0},
         ), {"warm_start": "skipped"}
     return A_inc, None, {"warm_start": "solved"}
 
@@ -205,7 +208,7 @@ def proportional_allocation(problem: AllocationProblem) -> Allocation:
             A, _ = out
             meta["capacity"] = "lp"
     total = time.perf_counter() - t0
-    meta.update(build_s=t_build, solve_s=total - t_build,
+    meta.update(build_s=t_build, solve_s=total - t_build, polish_s=0.0,
                 n_vars=problem.mu * problem.tau,
                 n_constraints=problem.tau + (problem.mu if problem.has_capacity else 0))
     return Allocation(

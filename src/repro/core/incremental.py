@@ -114,21 +114,28 @@ def patch_allocation(
     # patch_tol of it is holding the old shares in the wrong place
     ref = proportional_allocation(problem)
     if patched_m is not None and patched_m <= ref.makespan * (1.0 + patch_tol):
-        meta = dict(getattr(sub_alloc, "meta", {}) or {})
+        # top level keeps the inner solver's normalised phase keys
+        # (flattened, as before) *and* the full inner meta under "inner"
+        # so telemetry consumers see the k-column solve's own breakdown
+        inner = dict(getattr(sub_alloc, "meta", {}) or {})
+        meta = dict(inner)
         meta.update(incremental="patched", patch_tasks=int(new_cols.size),
                     patch_s=patch_s, patched_makespan=float(patched_m),
-                    heuristic_bound=float(ref.makespan), patch_tol=patch_tol)
+                    heuristic_bound=float(ref.makespan), patch_tol=patch_tol,
+                    inner=inner)
         return Allocation(A=patched_A, makespan=float(patched_m),
                           solver=sub_alloc.solver,
                           solve_time=time.perf_counter() - t0,
                           optimal=False, meta=meta)
 
     full = solve(problem, **solver_kw)
-    meta = dict(full.meta)
+    inner = dict(full.meta)
+    meta = dict(inner)
     meta.update(incremental="full_fallback", patch_tasks=int(new_cols.size),
                 patch_s=patch_s,
                 patched_makespan=None if patched_m is None else float(patched_m),
-                heuristic_bound=float(ref.makespan), patch_tol=patch_tol)
+                heuristic_bound=float(ref.makespan), patch_tol=patch_tol,
+                inner=inner)
     if patch_err is not None:
         meta["patch_error"] = patch_err
     return Allocation(A=full.A, makespan=full.makespan, solver=full.solver,

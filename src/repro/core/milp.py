@@ -179,6 +179,7 @@ def milp_allocation(
     )
     phase_meta = {"build_s": build_s,
                   "solve_s": time.perf_counter() - t_solve0,
+                  "polish_s": 0.0,  # MILP has no polish phase
                   "n_vars": int(n_vars), "n_constraints": int(n_constraints)}
     solve_time = time.perf_counter() - t0
 

@@ -7,7 +7,7 @@ Serving latency decomposes exactly like the paper's eq. 7: a constant
 prefill cost (gamma) plus a per-token decode cost (beta x tokens). The
 reusable :class:`ServeEngine` is what the LM-serving domain
 (:mod:`repro.domains.lm_serving`) drives as its local execution platform;
-the CLI fits the latency model online from its own measurements and prints
+the CLI fits the latency model online from its own measurements and logs
 the coefficients, which is what the fleet allocator consumes.
 """
 from __future__ import annotations
@@ -16,6 +16,10 @@ import argparse
 import dataclasses
 import time
 from typing import Any
+
+from repro.obs.log import get_logger
+
+log = get_logger("launch.serve")
 
 
 @dataclasses.dataclass
@@ -187,7 +191,7 @@ def main(argv=None) -> int:
     if args.smoke:
         cfg = cfg.smoke()
     if not cfg.has_decoder:
-        print(f"{args.arch} has no decoder; nothing to serve")
+        log.info(f"{args.arch} has no decoder; nothing to serve")
         return 0
 
     gens = [int(g) for g in args.queue.split(",") if g] if args.queue else []
@@ -199,23 +203,23 @@ def main(argv=None) -> int:
         results = engine.generate_many(gens, seed=args.seed)
         busy = sum(r.total_latency for r in results)
         for i, (g, r) in enumerate(zip(gens, results)):
-            print(f"stream {i}: {g} tokens in {r.total_latency*1e3:.1f} ms "
-                  f"(attributed share of the running batch)")
+            log.info(f"stream {i}: {g} tokens in {r.total_latency*1e3:.1f} ms "
+                     f"(attributed share of the running batch)")
         # solo baseline: every stream paying its own prefill + decode pass
         step = busy / max(sum(gens), 1)
         solo = sum(results[0].prefill_latency * len(gens) + step * g for g in gens)
-        print(f"continuous batch: {sum(gens)} tokens, engine busy "
-              f"{busy*1e3:.1f} ms (solo serves ~{solo*1e3:.1f} ms)")
+        log.info(f"continuous batch: {sum(gens)} tokens, engine busy "
+                 f"{busy*1e3:.1f} ms (solo serves ~{solo*1e3:.1f} ms)")
         return 0
     result = engine.generate(args.gen, seed=args.seed)
 
     n = np.arange(1, len(result.decode_latencies) + 1)
     cum = np.cumsum(result.decode_latencies)
     lm = fit_latency_model(n, cum)
-    print(f"prefill: {result.prefill_latency*1e3:.1f} ms "
-          f"for {args.batch}x{args.prompt_len}")
-    print(f"decode:  beta={lm.beta*1e3:.3f} ms/token-step, gamma={lm.gamma*1e3:.3f} ms")
-    print(f"sample output tokens[0]: {list(map(int, result.tokens[0, :8]))}")
+    log.info(f"prefill: {result.prefill_latency*1e3:.1f} ms "
+             f"for {args.batch}x{args.prompt_len}")
+    log.info(f"decode:  beta={lm.beta*1e3:.3f} ms/token-step, gamma={lm.gamma*1e3:.3f} ms")
+    log.info(f"sample output tokens[0]: {list(map(int, result.tokens[0, :8]))}")
     return 0
 
 

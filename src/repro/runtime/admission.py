@@ -161,8 +161,11 @@ class AdmissionController:
        time out tasks that waited too long.
     """
 
-    def __init__(self, config: AdmissionConfig | None = None):
+    def __init__(self, config: AdmissionConfig | None = None, tracer=None):
         self.config = config or AdmissionConfig()
+        #: optional repro.obs.Tracer; every shed becomes an instant event
+        #: on the admission track
+        self.tracer = tracer
         self.pending: deque[tuple[float, Any, float]] = deque()
         self.util = 0.0
         self.n_offered = 0
@@ -280,4 +283,9 @@ class AdmissionController:
             task_id=int(getattr(task, "task_id", -1)), t=t, reason=reason,
             queue_depth=len(self.pending),
             utilisation=round(self.util, 12), round=round_idx)
+        if self.tracer is not None:
+            self.tracer.instant(f"shed:{reason}", track="admission",
+                                cat="admission", task_id=event.task_id,
+                                queue_depth=event.queue_depth,
+                                round=round_idx)
         return RejectedTask(task=task, event=event)

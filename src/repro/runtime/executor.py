@@ -77,11 +77,17 @@ class Executor:
     as per-job :class:`TimedResult` errors (``raise_errors=False``).
     """
 
-    def __init__(self, mode: str = "concurrent", max_workers: int | None = None):
+    def __init__(self, mode: str = "concurrent", max_workers: int | None = None,
+                 tracer=None):
         if mode not in MODES:
             raise ValueError(f"unknown executor mode {mode!r}; expected one of {MODES}")
         self.mode = mode
         self.max_workers = max_workers
+        #: optional :class:`repro.obs.Tracer`; when enabled, ``map_timed``
+        #: callers may open one span per job via ``span_of``. Spans live on
+        #: per-thread stacks, so nested spans opened inside the job body
+        #: land under the job span even on pool threads.
+        self.tracer = tracer
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"Executor(mode={self.mode!r}, max_workers={self.max_workers})"
@@ -89,7 +95,9 @@ class Executor:
     def map_timed(self, fn: Callable[[T], Any], items: Iterable[T], *,
                   raise_errors: bool = True,
                   timeout_s: float | None = None,
-                  cancel: threading.Event | None = None) -> list[TimedResult]:
+                  cancel: threading.Event | None = None,
+                  span_of: Callable[[T], tuple[str, str]] | None = None
+                  ) -> list[TimedResult]:
         """``[fn(item) for item in items]`` with a per-item wall clock.
 
         Concurrent mode runs every item on its own pool thread; each
@@ -108,8 +116,22 @@ class Executor:
         a single host thread cannot be preempted). ``cancel``, when set,
         makes jobs that have not started yet yield :class:`JobCancelled`
         instead of running.
+
+        ``span_of`` maps an item to a ``(span name, track)`` pair; when the
+        executor carries an enabled tracer, each job's run is wrapped in
+        that span on its executing thread, so per-platform work shows up
+        as overlapping tracks in the exported trace.
         """
         jobs = list(items)
+        tracer = self.tracer
+        if tracer is not None and span_of is not None \
+                and getattr(tracer, "enabled", False):
+            inner = fn
+
+            def fn(item: T) -> Any:  # noqa: F811 - traced wrapper
+                name, track = span_of(item)
+                with tracer.span(name, track=track, cat="executor"):
+                    return inner(item)
 
         def timed(item: T) -> TimedResult:
             if cancel is not None and cancel.is_set():

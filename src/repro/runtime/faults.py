@@ -237,12 +237,16 @@ class CircuitBreaker:
     makespan, a round-barrier quantity identical across executor modes.
     """
 
-    def __init__(self, failure_threshold: int = 2, cooldown_s: float = 0.0):
+    def __init__(self, failure_threshold: int = 2, cooldown_s: float = 0.0,
+                 tracer=None):
         if failure_threshold < 1:
             raise ValueError(
                 f"failure_threshold must be >= 1, got {failure_threshold}")
         self.failure_threshold = failure_threshold
         self.cooldown_s = cooldown_s
+        #: optional repro.obs.Tracer; state transitions become instant
+        #: events on the platform's trace track
+        self.tracer = tracer
         self._state: dict[str, str] = {}
         self._fails: dict[str, int] = {}
         self._opened_at: dict[str, float] = {}
@@ -255,6 +259,10 @@ class CircuitBreaker:
         self._state[platform] = to
         self.transitions.append(
             BreakerTransition(platform, frm, to, at=now, round=round_idx))
+        if self.tracer is not None:
+            self.tracer.instant(f"breaker:{to}", track=platform,
+                                cat="breaker", frm=frm, at=now,
+                                round=round_idx)
         if to == OPEN:
             self._opened_at[platform] = now
 

@@ -62,6 +62,7 @@ from repro.core import (
 )
 from repro.core.metrics import AccuracyModel, CombinedModel, LatencyModel
 from repro.core.slo import SLOConfig, SLOTracker, quantile
+from repro.obs import lift_solver_phases, metrics as obs_metrics
 from .admission import (
     AdmissionConfig,
     AdmissionController,
@@ -583,6 +584,8 @@ class OnlineScheduler:
                  reason: str, degradations: list) -> int:
         """Step the rung ladder down one notch, itemising per active task."""
         sched = self.scheduler
+        sched.tracer.instant(f"degrade:{reason}", track="online",
+                             cat="degrade", rung=rung + 1, round=round_idx)
         c_from = sched.quality_vector(self._effective_quality(quality, rung))
         c_to = sched.quality_vector(self._effective_quality(quality, rung + 1))
         for j, t in enumerate(self.domain.tasks):
@@ -791,6 +794,12 @@ class OnlineScheduler:
         """
         cfg, sched, domain = self.config, self.scheduler, self.domain
         t_run = time.perf_counter()
+        tracer, ledger = sched.tracer, sched.ledger
+        obs_on = tracer.enabled
+        # task family names for the ledger's (platform, family, round) keys
+        task_family: dict[int, str] = (
+            {t.task_id: str(domain.launch_key(t)) for t in domain.tasks}
+            if obs_on else {})
         if scenario is not None:
             # the arrival cursor belongs to a run, not the scenario object,
             # so rewind it here. (Replaying a scenario across runs also
@@ -808,7 +817,8 @@ class OnlineScheduler:
 
         names = [domain.platform_name(p) for p in domain.platforms]
         breaker = CircuitBreaker(failure_threshold=cfg.outage_failures,
-                                 cooldown_s=cfg.breaker_cooldown)
+                                 cooldown_s=cfg.breaker_cooldown,
+                                 tracer=tracer if obs_on else None)
         alive = {pn: True for pn in names}
         done: dict[int, float] = {}
         done_pair: dict[tuple[str, int], float] = {}
@@ -823,7 +833,8 @@ class OnlineScheduler:
         rung, n_probes = 0, 0
 
         # -- overload-control state (all round-barrier, mode-parity safe)
-        admission = (AdmissionController(cfg.admission)
+        admission = (AdmissionController(cfg.admission,
+                                         tracer=tracer if obs_on else None)
                      if cfg.admission is not None else None)
         slo_tracker = SLOTracker(cfg.slo) if cfg.slo is not None else None
         tail = (TailDriftDetector(cfg.tail_window, cfg.tail_threshold,
@@ -845,10 +856,16 @@ class OnlineScheduler:
         unit_rates: dict[str, float] = {}
 
         solve_t0 = time.perf_counter()
-        alloc, A_full, quotas, rung = self._solve_degraded(
-            quality, rung, method, solver_kw, alive, done, incumbent_A=None,
-            done_pair=done_pair, degradations=degradations)
+        with tracer.span("solve[initial]", track="online", cat="solve",
+                         method=method):
+            alloc, A_full, quotas, rung = self._solve_degraded(
+                quality, rung, method, solver_kw, alive, done,
+                incumbent_A=None, done_pair=done_pair,
+                degradations=degradations)
         solve_wall = time.perf_counter() - solve_t0
+        if obs_on and alloc is not None:
+            lift_solver_phases(tracer, alloc.meta, tracer.now(),
+                               label=f"{alloc.solver or method}[initial]")
         resolve_wall = 0.0
         if alloc is None:
             raise ValueError("workload has no remaining work to execute")
@@ -864,6 +881,7 @@ class OnlineScheduler:
         rounds: list[RoundLog] = []
 
         for round_idx in range(cfg.max_rounds):
+            round_wall_t0 = tracer.now() if obs_on else 0.0
             elapsed = max(plat_lat.values(), default=0.0)
             if cfg.open_loop:
                 # rounds are *time barriers* on a shared fleet clock: a
@@ -887,7 +905,10 @@ class OnlineScheduler:
                 pname = domain.platform_name(p)
                 if breaker.poll(pname, elapsed, round_idx) != HALF_OPEN:
                     continue
-                outcome = self._probe(p, round_idx, seed, elapsed, quotas)
+                with tracer.span("probe", track=pname, cat="dispatch",
+                                 round=round_idx):
+                    outcome = self._probe(p, round_idx, seed, elapsed,
+                                          quotas)
                 if outcome is None:
                     continue
                 ok, recs, event = outcome
@@ -985,6 +1006,10 @@ class OnlineScheduler:
                     predicted = domain.predicted_latency(
                         solve_models[key], units)
                     detector.observe(pname, predicted, rec.latency)
+                    if obs_on:
+                        ledger.observe("latency", pname,
+                                       task_family.get(rec.task_id, "?"),
+                                       round_idx, predicted, rec.latency)
                     if tail is not None:
                         tail.observe(pname, predicted, rec.latency)
                     end_t = plat_lat[pname]
@@ -1118,6 +1143,10 @@ class OnlineScheduler:
             if arrived:
                 n_arrivals += len(arrived)
                 domain.tasks.extend(arrived)
+                if obs_on:
+                    task_family.update(
+                        {t.task_id: str(domain.launch_key(t))
+                         for t in arrived})
                 # benchmark newcomers on the survivors only; any pair left
                 # unfitted (dead platform, or an outage firing mid-ladder
                 # on a not-yet-dead one) gets an unreachable placeholder so
@@ -1173,6 +1202,9 @@ class OnlineScheduler:
                             target_s=tgt))
                         brown_rung += 1
                         brown_changed = True
+                        tracer.instant("brownout:deepen", track="online",
+                                       cat="brownout", rung=brown_rung,
+                                       round=round_idx)
                     elif recent < tgt * cfg.slo.exit_ratio and brown_rung > 0:
                         brownout_transitions.append(BrownoutTransition(
                             round=round_idx, at=elapsed,
@@ -1181,6 +1213,9 @@ class OnlineScheduler:
                             target_s=tgt))
                         brown_rung -= 1
                         brown_changed = True
+                        tracer.instant("brownout:restore", track="online",
+                                       cat="brownout", rung=brown_rung,
+                                       round=round_idx)
 
             drifted = detector.drifted(alive)
             tail_drifted = tail.drifted(alive) if tail is not None else ()
@@ -1202,8 +1237,11 @@ class OnlineScheduler:
                     # only the median detector's verdict re-projects stale
                     # windows — a blown tail with a quiet median means the
                     # *spread* changed, not the level
-                    self._refit(windows, detector, drifted, alive,
-                                solve_models)
+                    with tracer.span("refit", track="online", cat="refit",
+                                     round=round_idx,
+                                     drifted=sorted(drifted)):
+                        self._refit(windows, detector, drifted, alive,
+                                    solve_models)
                     n_refits += 1
                 active_tids = ({tid for (_pn, tid), q in quotas.items()
                                 if q > 0}
@@ -1216,13 +1254,20 @@ class OnlineScheduler:
                 # The effective rung is the deeper of the monotone
                 # (capacity/deadline) rung and the reversible brownout rung.
                 eff_rung = max(rung, brown_rung)
-                alloc2, A2, quotas2, solved_rung = self._solve_degraded(
-                    quality, eff_rung, method, solver_kw, alive, done,
-                    incumbent_A=None if revived else A_full,
-                    elapsed=plat_lat,
-                    done_pair=done_pair, active_tids=active_tids,
-                    round_idx=round_idx, degradations=degradations,
-                    patch_tids=patch_tids)
+                with tracer.span("resolve", track="online", cat="solve",
+                                 round=round_idx, rung=eff_rung,
+                                 patch=patch_tids is not None):
+                    alloc2, A2, quotas2, solved_rung = self._solve_degraded(
+                        quality, eff_rung, method, solver_kw, alive, done,
+                        incumbent_A=None if revived else A_full,
+                        elapsed=plat_lat,
+                        done_pair=done_pair, active_tids=active_tids,
+                        round_idx=round_idx, degradations=degradations,
+                        patch_tids=patch_tids)
+                if obs_on and alloc2 is not None:
+                    lift_solver_phases(
+                        tracer, alloc2.meta, tracer.now(),
+                        label=f"{alloc2.solver or method}[r{round_idx}]")
                 if solved_rung > eff_rung:
                     # forced (capacity/deadline) degradation stays monotone
                     rung = solved_rung
@@ -1269,6 +1314,19 @@ class OnlineScheduler:
                 completions=completions,
                 t=max(plat_lat.values(), default=0.0),
                 kv_headroom=round_kv_headroom))
+            if obs_on:
+                # the round span is added retroactively: everything inside
+                # it (dispatch, probes, re-solves) already traced itself,
+                # so only the enclosing interval is recorded here
+                tracer.add_span(
+                    f"round[{round_idx}]", "online", round_wall_t0,
+                    tracer.now(), cat="online",
+                    args={"resolved": resolved, "arrivals": len(arrived),
+                          "shed": round_shed, "completions": completions,
+                          "brownout_rung": brown_rung,
+                          "drifted": sorted(drifted)})
+                obs_metrics.gauge("online.brownout_rung").set(brown_rung)
+                obs_metrics.counter("admission.shed").inc(round_shed)
 
         else:
             if any(q > 0 for q in quotas.values()) and not cfg.open_loop:
@@ -1284,13 +1342,37 @@ class OnlineScheduler:
         # actually asked to deliver after the ladder stepped down
         problem = sched.problem(
             self._effective_quality(quality, max(rung, brown_rung)))
+        summary = domain.summarise(all_records, problem)
+        measured = max(plat_lat.values(), default=0.0)
+        if obs_on:
+            # whole-run accountability: the *initial* predicted makespan vs
+            # what the adaptive run actually measured (same inf-on-zero
+            # convention as OnlineReport.makespan_error), plus delivered
+            # accuracy when the domain reports it
+            ledger.observe("makespan", "*", "-", -1, predicted0, measured)
+            measured_ci = summary.get("measured_ci") \
+                if isinstance(summary, dict) else None
+            if isinstance(measured_ci, dict):
+                for j, t in enumerate(domain.tasks):
+                    m = measured_ci.get(t.task_id)
+                    if m is not None:
+                        ledger.observe("accuracy", "*",
+                                       task_family.get(t.task_id, "?"), -1,
+                                       float(problem.c[j]), float(m))
+            obs_metrics.counter("online.rounds").inc(len(rounds))
+            obs_metrics.counter("online.resolves").inc(n_resolves)
+            obs_metrics.counter("online.refits").inc(n_refits)
+            obs_metrics.counter("runtime.records").inc(len(all_records))
+            obs_metrics.counter("runtime.faults").inc(len(fault_events))
+            obs_metrics.counter("runtime.retries").inc(
+                count_retries(fault_events))
         return OnlineReport(
             allocation=alloc,
             predicted_makespan=predicted0,
-            measured_makespan=max(plat_lat.values(), default=0.0),
+            measured_makespan=measured,
             platform_latencies=plat_lat,
             records=all_records,
-            summary=domain.summarise(all_records, problem),
+            summary=summary,
             rounds=rounds,
             n_solves=n_solves,
             n_resolves=n_resolves,

@@ -38,6 +38,10 @@ _BUILTIN: dict[str, str] = {
     # overload-control audit trails (shedding / brownout guardrail)
     "ShedEvent": "repro.runtime.admission:ShedEvent",
     "BrownoutTransition": "repro.runtime.admission:BrownoutTransition",
+    # observability: metric snapshots and prediction-ledger entries
+    # persist on the same stream as the run they describe
+    "MetricSnapshot": "repro.obs.metrics:MetricSnapshot",
+    "LedgerEntry": "repro.obs.ledger:LedgerEntry",
 }
 
 _REGISTRY: dict[str, type] = {}

@@ -37,6 +37,12 @@ from repro.core import (
     ml_allocation,
     proportional_allocation,
 )
+from repro.obs import (
+    PredictionLedger,
+    lift_solver_phases,
+    metrics as obs_metrics,
+    resolve_tracer,
+)
 from .domain import Domain, RunRecordLike
 from .executor import Executor
 from .faults import (
@@ -128,9 +134,19 @@ class Scheduler:
     """
 
     def __init__(self, domain: Domain, mode: str = "concurrent",
-                 max_workers: int | None = None):
+                 max_workers: int | None = None, trace=None):
         self.domain = domain
-        self.executor = Executor(mode=mode, max_workers=max_workers)
+        #: span tracer (repro.obs): ``trace`` may be a Tracer, True/False,
+        #: or None to follow the process default (``REPRO_TRACE=1``). A
+        #: disabled tracer makes every instrumentation site a no-op, which
+        #: is what keeps instrumented overhead off the hot path by default.
+        self.tracer = resolve_tracer(trace)
+        #: prediction-accountability ledger (repro.obs): populated when
+        #: tracing is enabled — each execute pairs predicted vs measured
+        #: latency/makespan/accuracy per (platform, task family, round).
+        self.ledger = PredictionLedger()
+        self.executor = Executor(mode=mode, max_workers=max_workers,
+                                 tracer=self.tracer)
         self.models: dict[tuple[str, int], Any] | None = None
         #: raw benchmark records per (platform, task_id) from the last
         #: characterise pass — the online loop's re-fit windows start from
@@ -151,7 +167,8 @@ class Scheduler:
     def _executor(self, mode: str | None) -> Executor:
         if mode is None:
             return self.executor
-        return Executor(mode=mode, max_workers=self.executor.max_workers)
+        return Executor(mode=mode, max_workers=self.executor.max_workers,
+                        tracer=self.tracer)
 
     @property
     def tasks(self) -> list:
@@ -165,8 +182,13 @@ class Scheduler:
 
     def characterise(self, seed: int = 1, mode: str | None = None, **kw) -> None:
         sink: dict[tuple[str, int], list[RunRecordLike]] = {}
-        self.models = self.domain.characterise(
-            seed=seed, executor=self._executor(mode), record_sink=sink, **kw)
+        with self.tracer.span("characterise", track="scheduler",
+                              cat="characterise",
+                              n_platforms=len(self.platforms),
+                              n_tasks=len(self.tasks)):
+            self.models = self.domain.characterise(
+                seed=seed, executor=self._executor(mode), record_sink=sink,
+                **kw)
         self.characterise_records = sink
         self.models_version += 1
         self._delta, self._gamma = self.model_matrices()
@@ -328,10 +350,22 @@ class Scheduler:
         count. ``cluster_rtol`` merges near-identical families at bounded
         relative error."""
         problem = self.problem(quality)
-        if cluster:
-            return clustered_allocation(problem, method, rtol=cluster_rtol,
-                                        **solver_kw)
-        return SOLVERS[method](problem, **solver_kw)
+        with self.tracer.span("allocate", track="scheduler", cat="solve",
+                              method=method, cluster=cluster) as sp:
+            if cluster:
+                alloc = clustered_allocation(problem, method,
+                                             rtol=cluster_rtol, **solver_kw)
+            else:
+                alloc = SOLVERS[method](problem, **solver_kw)
+        if self.tracer.enabled:
+            # lift the solver's per-phase meta timings (PR 7) into real
+            # spans on the solver track, ending where allocate ended
+            lift_solver_phases(self.tracer, alloc.meta, sp.t1,
+                               label=f"{alloc.solver or method}")
+            solve_s = alloc.meta.get("solve_s")
+            if solve_s:
+                obs_metrics.histogram("solver.solve_s").observe(solve_s)
+        return alloc
 
     # -- step 5: execution --------------------------------------------------
 
@@ -401,10 +435,17 @@ class Scheduler:
         """
         executor = self._executor(mode)
         catchable = (DispatchFault,) + tuple(catch)
+        tracer = self.tracer
 
         def run_platform(shard) -> DispatchResult:
             p, groups = shard
             pname = self.domain.platform_name(p)
+            # the executor opened this platform's "dispatch" span on the
+            # current thread (span_of below); annotate it with the round,
+            # the parity-safe virtual clock endpoints, and the counts
+            dsp = tracer.current()
+            dsp.args["round"] = round_idx
+            v_start = getattr(p, "clock", None)
             recs: list[RunRecordLike] = []
             faults: list[FaultEvent] = []
             error: BaseException | None = None
@@ -417,61 +458,84 @@ class Scheduler:
                 gtasks = [t for t, _ in group]
                 group_seed = (seed(pname, self.domain.launch_key(gtasks[0]))
                               if callable(seed) else seed)
-                pending = list(group)
-                attempt = 1
-                while pending:
-                    clock0 = getattr(p, "clock", None)
-                    try:
-                        new = self.domain.dispatch_batch(
-                            p, [t for t, _ in pending],
-                            [u for _, u in pending], seed=group_seed)
-                        if retry is not None:
-                            check_records(new)
-                        recs.extend(new)
-                        break
-                    except catchable as exc:
-                        # a batch failing mid-way may carry the records it
-                        # completed first (DispatchFault.records) — that
-                        # work already ran, so keep it in the accounting
-                        salvaged = list(getattr(exc, "records", []))
-                        recs.extend(salvaged)
-                        burned = 0.0
-                        if clock0 is not None:
-                            burned = max(
-                                getattr(p, "clock", clock0) - clock0
-                                - sum(r.latency for r in salvaged), 0.0)
-                        kind = fault_kind(exc)
-                        if (retry is not None and retry.retryable(exc)
-                                and attempt < retry.max_attempts
-                                and budget > 0):
-                            budget -= 1
-                            faults.append(FaultEvent(
-                                pname, -1, round_idx, kind, "retried",
-                                attempt, burned))
-                            done = {r.task_id for r in salvaged}
-                            pending = [(t, u) for t, u in pending
-                                       if t.task_id not in done]
-                            pause = retry.delay(
-                                0 if callable(seed) else seed,
-                                pname, round_idx, attempt)
-                            if pause > 0.0:
-                                time.sleep(pause)
-                            attempt += 1
-                            continue
-                        faults.append(FaultEvent(
-                            pname, -1, round_idx, kind, "exhausted",
-                            attempt, burned))
-                        if isinstance(exc, catch):
-                            error = exc
+                with tracer.span("launch", track=pname, cat="dispatch",
+                                 tasks=len(group),
+                                 units=sum(u for _, u in group)) as lsp:
+                    gv0 = getattr(p, "clock", None)
+                    pending = list(group)
+                    attempt = 1
+                    while pending:
+                        clock0 = getattr(p, "clock", None)
+                        try:
+                            new = self.domain.dispatch_batch(
+                                p, [t for t, _ in pending],
+                                [u for _, u in pending], seed=group_seed)
+                            if retry is not None:
+                                check_records(new)
+                            recs.extend(new)
                             break
-                        raise
+                        except catchable as exc:
+                            # a batch failing mid-way may carry the records
+                            # it completed first (DispatchFault.records) —
+                            # that work already ran, so keep it in the
+                            # accounting
+                            salvaged = list(getattr(exc, "records", []))
+                            recs.extend(salvaged)
+                            burned = 0.0
+                            if clock0 is not None:
+                                burned = max(
+                                    getattr(p, "clock", clock0) - clock0
+                                    - sum(r.latency for r in salvaged), 0.0)
+                            kind = fault_kind(exc)
+                            if (retry is not None and retry.retryable(exc)
+                                    and attempt < retry.max_attempts
+                                    and budget > 0):
+                                budget -= 1
+                                faults.append(FaultEvent(
+                                    pname, -1, round_idx, kind, "retried",
+                                    attempt, burned))
+                                tracer.instant(
+                                    f"fault:{kind}", track=pname,
+                                    cat="fault", action="retried",
+                                    attempt=attempt, round=round_idx,
+                                    burned=burned)
+                                done = {r.task_id for r in salvaged}
+                                pending = [(t, u) for t, u in pending
+                                           if t.task_id not in done]
+                                pause = retry.delay(
+                                    0 if callable(seed) else seed,
+                                    pname, round_idx, attempt)
+                                if pause > 0.0:
+                                    time.sleep(pause)
+                                attempt += 1
+                                continue
+                            faults.append(FaultEvent(
+                                pname, -1, round_idx, kind, "exhausted",
+                                attempt, burned))
+                            tracer.instant(
+                                f"fault:{kind}", track=pname, cat="fault",
+                                action="exhausted", attempt=attempt,
+                                round=round_idx, burned=burned)
+                            if isinstance(exc, catch):
+                                error = exc
+                                break
+                            raise
+                    if gv0 is not None:
+                        lsp.set_virtual(gv0, getattr(p, "clock", gv0))
                 if error is not None:
                     break
+            if v_start is not None:
+                dsp.set_virtual(v_start, getattr(p, "clock", v_start))
+            dsp.args["n_records"] = len(recs)
+            dsp.args["n_faults"] = len(faults)
             return DispatchResult(records=recs, wall_s=0.0, error=error,
                                   faults=tuple(faults))
 
         t0 = time.perf_counter()
-        timed = executor.map_timed(run_platform, plan)
+        timed = executor.map_timed(
+            run_platform, plan,
+            span_of=lambda shard: ("dispatch",
+                                   self.domain.platform_name(shard[0])))
         wall_s = time.perf_counter() - t0
         results = [dataclasses.replace(t.value, wall_s=t.wall_s) for t in timed]
         return results, wall_s
@@ -488,8 +552,10 @@ class Scheduler:
         (a storm honestly costs makespan)."""
         problem = self.problem(quality)
         shards = self.shards(allocation, problem)
-        results, wall_s = self.dispatch_plan(shards, seed=seed, mode=mode,
-                                             retry=retry)
+        with self.tracer.span("execute", track="scheduler", cat="execute",
+                              n_platforms=len(shards)):
+            results, wall_s = self.dispatch_plan(shards, seed=seed,
+                                                 mode=mode, retry=retry)
 
         records: list[RunRecordLike] = []
         fault_events: list[FaultEvent] = []
@@ -504,7 +570,7 @@ class Scheduler:
             for ev in result.faults:
                 fault_events.append(ev)
                 plat_lat[pname] += ev.latency
-        return RuntimeReport(
+        report = RuntimeReport(
             allocation=allocation,
             predicted_makespan=makespan(allocation.A, problem),
             measured_makespan=max(plat_lat.values(), default=0.0),
@@ -516,6 +582,42 @@ class Scheduler:
             mode=self._executor(mode).mode,
             fault_events=fault_events,
         )
+        if self.tracer.enabled:
+            self._account(report, problem)
+        return report
+
+    def _account(self, report: RuntimeReport,
+                 problem: AllocationProblem) -> None:
+        """Pair this execute's predictions with their measurements in the
+        ledger (and bump the process metrics) — only on instrumented runs,
+        so the uninstrumented hot path never pays for it."""
+        family = {t.task_id: str(self.domain.launch_key(t))
+                  for t in self.tasks}
+        # the ledger's makespan entry uses the same zero-measured -> inf
+        # convention as RuntimeReport.makespan_error
+        self.ledger.observe("makespan", "*", "-", -1,
+                            report.predicted_makespan,
+                            report.measured_makespan)
+        lat_hist = obs_metrics.histogram("runtime.record_latency_s")
+        for rec in report.records:
+            model = self.models.get((rec.platform, rec.task_id))
+            if model is not None:
+                predicted = self.domain.predicted_latency(
+                    model, self.domain.record_units(rec))
+                self.ledger.observe("latency", rec.platform,
+                                    family.get(rec.task_id, "?"), -1,
+                                    predicted, rec.latency)
+            lat_hist.observe(rec.latency)
+        measured_ci = (report.summary or {}).get("measured_ci")
+        if isinstance(measured_ci, dict):
+            for j, t in enumerate(self.tasks):
+                m = measured_ci.get(t.task_id)
+                if m is not None:
+                    self.ledger.observe("accuracy", "*",
+                                        family.get(t.task_id, "?"), -1,
+                                        float(problem.c[j]), float(m))
+        obs_metrics.counter("runtime.records").inc(len(report.records))
+        obs_metrics.counter("runtime.faults").inc(len(report.fault_events))
 
     # -- convenience: the whole Fig. 1 flow --------------------------------
 
