@@ -55,6 +55,17 @@ its unbounded backlog growth and blown p99 are the A/B the overload
 controls are measured against (CI gates: guarded p99 within target,
 bounded shed fraction, non-negative KV headroom).
 
+The ``mesh`` section (PR 10 onward) quotes the same device kind at four
+tensor-parallel mesh shapes (1x1 .. 1x8) and solves an LM-serving
+instance under two pressures with all three solvers: a gamma-dominated
+short-generation workload (the collective-inflated wide mesh is the worst
+buy) and a KV-bound long-generation workload (the pooled cache forces the
+bulk onto the widest mesh). Tracked: per-shape token shares and the
+latency-vs-capacity argmax *flip*, zero pooled-KV oversubscription, the
+fitted per-shape eq. 7 coefficients (sharded speedup at the widest shape
+must exceed 1), and per-shape latency prediction error from an
+instrumented execute (p50 within the paper's 10% band).
+
 The ``faults`` section (PR 6 onward) runs the same instance through a
 scripted three-kind fault storm — a flaky window on the Desktop
 (transient blips), a finite outage on the FPGA, a corrupt window on the
@@ -513,6 +524,147 @@ def slo_section(fast: bool = True) -> dict:
     }
 
 
+def mesh_section(fast: bool = True) -> dict:
+    """Mesh-sharded platforms (PR 10 onward): the same device kind quoted
+    at four tensor-parallel widths (:data:`LM_MESH_FLEET_SPECS`), solved
+    under two pressures. A short-generation workload is gamma-dominated —
+    the collective-inflated wide mesh is the worst buy and the solvers
+    concentrate tokens on narrow shapes; a long-generation workload
+    outgrows the narrow shapes' KV pools and the pooled cache forces the
+    bulk onto the widest mesh. Tracked per solver: per-shape token shares,
+    the argmax shape under each pressure, the latency-vs-capacity *flip*,
+    and zero pooled-KV oversubscription. A fitted-model leg records the
+    per-shape eq. 7 coefficients (the sharded speedup at the widest shape
+    must exceed 1) and an instrumented execute checks per-shape latency
+    prediction error stays inside the paper's 10% band."""
+    from repro.core import capacity_ok, platform_usage
+    from repro.domains.lm_serving import (
+        LM_MESH_FLEET_SPECS, LMRequest, SimulatedLMPlatform, build_lm_fleet,
+    )
+    from repro.runtime import Scheduler, make_domain
+
+    widest = LM_MESH_FLEET_SPECS[-1]
+    solver_kw = {
+        "heuristic": {},
+        "ml": dict(chains=8, steps=1500 if fast else 3000, rounds=1, seed=0,
+                   time_limit=30 if fast else 600),
+        "milp": dict(time_limit=30 if fast else 600),
+    }
+
+    def reqs_latency():
+        # 6 x 8 tokens: work is microseconds, gamma milliseconds
+        return [LMRequest("qwen25_3b", prompt_len=8, gen_tokens=8, batch=2,
+                          max_new_tokens=16, task_id=i) for i in range(6)]
+
+    def reqs_capacity():
+        # 14 x 450 tokens at 1 KiB KV/token: the narrow shapes pool 3584
+        # token-slots, so >= 2716 tokens must land on the 1x8 (cap 4096)
+        return [LMRequest("qwen25_3b", prompt_len=8, gen_tokens=450, batch=2,
+                          max_new_tokens=512, task_id=i) for i in range(14)]
+
+    def characterised(reqs):
+        sched = Scheduler(make_domain(
+            "lm_serving", reqs, build_lm_fleet(include_local=False, mesh=True)))
+        sched.characterise(seed=1, token_ladder=(2, 8, 16))
+        return sched
+
+    # -- per-shape eq. 7 coefficients ---------------------------------------
+    # solo long-generation characterisation at negligible jitter: beta is
+    # microseconds/token against a milliseconds gamma, so identifying it
+    # needs a high-SNR fit, not the noisy fleet defaults
+    model_sched = Scheduler(make_domain(
+        "lm_serving",
+        [LMRequest("qwen25_3b", prompt_len=8, gen_tokens=450, batch=2,
+                   max_new_tokens=512, task_id=0)],
+        [SimulatedLMPlatform(s, jitter=1e-5) for s in LM_MESH_FLEET_SPECS]))
+    model_sched.characterise(seed=1, token_ladder=(32, 128, 450))
+    per_shape = {}
+    for spec in LM_MESH_FLEET_SPECS:
+        m = model_sched.models[(spec.name, 0)].latency
+        per_shape[spec.name] = {
+            "mesh_shape": list(spec.mesh_shape),
+            "beta_s_per_token": m.beta, "gamma_s": m.gamma,
+            "tp_speedup_datasheet": spec.tp_speedup,
+            "rtt_effective_ms": spec.effective_rtt_ms,
+            "kv_pool_bytes": spec.total_mem_bytes,
+        }
+    narrow_beta = per_shape[LM_MESH_FLEET_SPECS[0].name]["beta_s_per_token"]
+    wide_beta = per_shape[widest.name]["beta_s_per_token"]
+    sharded_speedup = narrow_beta / wide_beta
+    wide_gamma_gain = (per_shape[widest.name]["gamma_s"]
+                       / per_shape[LM_MESH_FLEET_SPECS[0].name]["gamma_s"])
+    emit("allocation.mesh.model", wide_beta * 1e6,
+         f"speedup_1x{widest.model_parallel}={sharded_speedup:.2f}x"
+         f"(datasheet={widest.tp_speedup:.2f}x);"
+         f"gamma_gain={wide_gamma_gain:.2f}x")
+
+    # -- the wide-vs-narrow choice under both pressures --------------------
+    scheds = {"latency": characterised(reqs_latency()),
+              "capacity": characterised(reqs_capacity())}
+    solvers: dict = {}
+    for method, kw in solver_kw.items():
+        legs = {}
+        for pressure, sched in scheds.items():
+            alloc = sched.allocate(method=method, **kw)
+            problem = sched.problem()
+            tokens = (alloc.A * problem.c[None, :]).sum(axis=1)
+            usage = platform_usage(alloc.A, problem)
+            over = int((usage > problem.capacity * (1 + 1e-6)).sum())
+            shares = {s.name: float(t)
+                      for s, t in zip(LM_MESH_FLEET_SPECS, tokens)}
+            legs[pressure] = {
+                "tokens": shares,
+                "argmax": max(shares, key=shares.get),
+                "makespan": alloc.makespan,
+                "solve_time_s": alloc.solve_time,
+                "capacity_ok": bool(capacity_ok(alloc.A, problem)),
+                "oversubscribed_platforms": over,
+                "kv_usage_bytes": {s.name: float(u) for s, u
+                                   in zip(LM_MESH_FLEET_SPECS, usage)},
+            }
+        flip = (legs["latency"]["argmax"] != widest.name
+                and legs["capacity"]["argmax"] == widest.name)
+        solvers[method] = {**legs, "flip": flip}
+        emit(f"allocation.mesh.{method}",
+             legs["capacity"]["solve_time_s"] * 1e6,
+             f"latency_argmax={legs['latency']['argmax']};"
+             f"capacity_argmax={legs['capacity']['argmax']};"
+             f"flip={flip};"
+             f"oversubscribed={legs['capacity']['oversubscribed_platforms']}")
+
+    # -- per-shape prediction accountability on an instrumented execute ---
+    ledger_reqs = [LMRequest("qwen25_3b", prompt_len=8, gen_tokens=48,
+                             batch=2, max_new_tokens=64, task_id=i)
+                   for i in range(6)]
+    led_sched = Scheduler(make_domain(
+        "lm_serving", ledger_reqs,
+        build_lm_fleet(include_local=False, mesh=True)), trace=True)
+    led_sched.characterise(seed=1, token_ladder=(2, 8, 16))
+    led_sched.execute(led_sched.allocate(method="heuristic"))
+    by_shape = {name: stats for name, stats
+                in led_sched.ledger.platform_summary("latency").items()
+                if name in per_shape}
+    p50s = [s["p50"] for s in by_shape.values() if s["p50"] is not None]
+    ledger = {
+        "per_shape": by_shape,
+        "max_p50_error": max(p50s) if p50s else None,
+        "within_band": bool(p50s) and max(p50s) <= 0.10,
+    }
+    emit("allocation.mesh.ledger", (max(p50s) if p50s else 0.0) * 1e6,
+         f"shapes={len(by_shape)};"
+         f"max_p50={max(p50s):.3f}" if p50s else "shapes=0")
+
+    return {
+        "fleet": [s.name for s in LM_MESH_FLEET_SPECS],
+        "widest": widest.name,
+        "per_shape_model": per_shape,
+        "sharded_speedup_widest": sharded_speedup,
+        "wide_gamma_gain": wide_gamma_gain,
+        "solvers": solvers,
+        "ledger": ledger,
+    }
+
+
 def main(fast: bool = True) -> None:
     import numpy as np
 
@@ -754,6 +906,9 @@ def main(fast: bool = True) -> None:
     # -- slo: open-loop overload sweep + the 2x guarded/control A/B -------
     slo = slo_section(fast)
 
+    # -- mesh: wide-vs-narrow tensor-parallel shapes under two pressures --
+    mesh = mesh_section(fast)
+
     # -- scaling: fleet-size sweep, build speedup, incremental patch ------
     scaling = scaling_section(fast)
 
@@ -773,6 +928,7 @@ def main(fast: bool = True) -> None:
         "online": online,
         "faults": faults,
         "slo": slo,
+        "mesh": mesh,
         "scaling": scaling,
         "telemetry": telemetry,
     }

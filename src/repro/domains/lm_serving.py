@@ -52,14 +52,14 @@ import numpy as np
 
 from repro.core.allocation import CapacityError, linear_work_reduction
 from repro.core.metrics import CombinedModel, LatencyModel, fit_latency_model
-from repro.runtime.domain import Domain, PlatformSpec, seed_for
+from repro.runtime.domain import Domain, MeshPlatformSpec, PlatformSpec, seed_for
 from repro.runtime.scenario import Scenario, apply_scenario, salvage_runs
 
 __all__ = [
     "LMRequest", "ServeRecord", "LMServingModel",
     "LocalLMPlatform", "SimulatedLMPlatform",
-    "LM_FLEET_SPECS", "build_lm_fleet", "smoke_requests",
-    "LMServingDomain", "flops_per_token",
+    "LM_FLEET_SPECS", "LM_MESH_FLEET_SPECS", "build_lm_fleet",
+    "smoke_requests", "LMServingDomain", "flops_per_token",
     "kv_bytes_per_token", "request_kv_bytes",
 ]
 
@@ -205,6 +205,23 @@ LM_FLEET_SPECS: list[PlatformSpec] = [
     PlatformSpec("Cloud Pod",        "GPU", "accelerator pod", "us-west", 800.0, 120.000, mem_bytes=8 * 1024 ** 2),
 ]
 
+#: The mesh-shaped fleet: the *same* device kind quoted at several
+#: tensor-parallel widths, so the solvers genuinely trade one wide mesh
+#: (lowest beta, pooled KV, collective-inflated gamma) against many
+#: narrow ones (cheap gamma, per-device KV, request-level parallelism).
+#: ``gflops``/``rtt_ms``/``mem_bytes`` stay the Rack GPU datasheet row;
+#: only the shape varies.
+def _rack_mesh(model: int) -> MeshPlatformSpec:
+    return MeshPlatformSpec(
+        f"Rack GPU 1x{model}", "GPU", "rack server", "on-prem",
+        50.0, 4.000, mem_bytes=512 * 1024, mesh_shape=(1, model),
+        tp_efficiency=0.85, collective_ms=2.0)
+
+
+LM_MESH_FLEET_SPECS: list[MeshPlatformSpec] = [
+    _rack_mesh(1), _rack_mesh(2), _rack_mesh(4), _rack_mesh(8),
+]
+
 
 class _LMPlatformBase:
     """Shared platform plumbing: the token clamp and batched dispatch."""
@@ -217,7 +234,9 @@ class _LMPlatformBase:
 
     def _admission_guard(self, reqs: Sequence[LMRequest],
                          tokens: Sequence[int]) -> None:
-        cap = self.spec.mem_bytes
+        # KV pools across every device of a mesh platform; a single
+        # device is the trivial (1, 1) mesh, so total == mem_bytes there
+        cap = self.spec.total_mem_bytes
         for req, n in zip(reqs, tokens):
             if request_kv_bytes(req, n) > cap:
                 raise CapacityError(
@@ -244,13 +263,28 @@ class LocalLMPlatform(_LMPlatformBase):
     max_seq) — the compile unit), and warmed outside the timed region, so
     gamma measures prefill + dispatch, not compilation."""
 
-    def __init__(self, name: str = "Local JAX LM", rtt_ms: float = 0.05):
-        self.spec = PlatformSpec(name, "CPU", "jax-cpu", "localhost",
-                                 gflops=float("nan"), rtt_ms=rtt_ms)
+    def __init__(self, name: str = "Local JAX LM", rtt_ms: float = 0.05,
+                 tp: int = 1):
+        if tp > 1:
+            self.spec: PlatformSpec = MeshPlatformSpec(
+                name, "CPU", "jax-cpu", "localhost",
+                gflops=float("nan"), rtt_ms=rtt_ms, mesh_shape=(1, tp))
+        else:
+            self.spec = PlatformSpec(name, "CPU", "jax-cpu", "localhost",
+                                     gflops=float("nan"), rtt_ms=rtt_ms)
+        self.tp = int(tp)
+        self._mesh = None
         self._engines: dict[tuple, object] = {}
         # characterisation threads for different launch groups share this
         # platform; double-checked locking keeps build+warm once per family
         self._engines_lock = threading.Lock()
+
+    def _host_mesh(self):
+        if self._mesh is None and self.tp > 1:
+            from repro.launch.mesh import make_host_mesh
+
+            self._mesh = make_host_mesh(data=1, model=self.tp)
+        return self._mesh
 
     def _engine(self, req: LMRequest):
         key = (req.arch, req.smoke, req.batch, req.prompt_len, req.max_seq)
@@ -263,7 +297,8 @@ class LocalLMPlatform(_LMPlatformBase):
 
                     eng = ServeEngine(req.config(), batch=req.batch,
                                       prompt_len=req.prompt_len,
-                                      max_seq=req.max_seq)
+                                      max_seq=req.max_seq,
+                                      mesh=self._host_mesh())
                     eng.warm()
                     self._engines[key] = eng
         return eng
@@ -294,7 +329,7 @@ class LocalLMPlatform(_LMPlatformBase):
         out: list[ServeRecord] = []
         wave: list[int] = []
         held = 0.0
-        cap = self.spec.mem_bytes
+        cap = self.spec.total_mem_bytes
 
         def flush():
             if not wave:
@@ -368,8 +403,10 @@ class SimulatedLMPlatform(_LMPlatformBase):
         admitted in the first wave, and the TTFT-visible queueing delay
         for requests gated behind a full cache.
         """
-        cap = self.spec.mem_bytes
-        gps = self.spec.gflops * 1e9
+        # mesh platforms: beta falls with the (efficiency-discounted)
+        # tensor-parallel width, KV pools across every device
+        cap = self.spec.total_mem_bytes
+        gps = self.spec.effective_gflops * 1e9
         d = [flops_per_token(r.config(), r.batch) / gps for r in reqs]
         prefill = [r.prompt_len * di for r, di in zip(reqs, d)]
         need = [request_kv_bytes(r, n) for r, n in zip(reqs, tokens)]
@@ -417,7 +454,8 @@ class SimulatedLMPlatform(_LMPlatformBase):
             jitter = rng.lognormal(0.0, self.jitter)
             pre = pre_s * jitter
             qd = wait_s * jitter
-            latency = (pre_s + dec_s + self.spec.rtt_ms * 1e-3) * jitter
+            # gamma picks up the per-hop collective cost on mesh platforms
+            latency = (pre_s + dec_s + self.spec.effective_rtt_ms * 1e-3) * jitter
             if self.scenario is not None:
                 stretched = apply_scenario(self, latency)
                 scale = stretched / max(latency, 1e-300)
@@ -443,9 +481,16 @@ def _as_token_list(reqs: Sequence[LMRequest], n_tokens) -> list[int]:
 
 
 def build_lm_fleet(include_local: bool = True,
-                   specs: Sequence[PlatformSpec] | None = None) -> list:
-    """The evaluation fleet (optionally + the real local engine)."""
-    fleet: list = [SimulatedLMPlatform(s) for s in (specs or LM_FLEET_SPECS)]
+                   specs: Sequence[PlatformSpec] | None = None,
+                   mesh: bool = False) -> list:
+    """The evaluation fleet (optionally + the real local engine).
+
+    ``mesh=True`` swaps in :data:`LM_MESH_FLEET_SPECS` — the same device
+    kind at several tensor-parallel widths — so the solvers choose between
+    one wide mesh and many narrow ones."""
+    if specs is None:
+        specs = LM_MESH_FLEET_SPECS if mesh else LM_FLEET_SPECS
+    fleet: list = [SimulatedLMPlatform(s) for s in specs]
     if include_local:
         fleet.append(LocalLMPlatform())
     return fleet
@@ -495,7 +540,12 @@ class LMServingDomain(Domain):
         return _kv_per_token(req.arch, req.smoke, req.batch)
 
     def platform_capacity(self, platform) -> float:
-        return float(getattr(platform.spec, "mem_bytes", math.inf))
+        """The KV budget the allocator sees: pooled across every device of
+        a mesh platform (``total_mem_bytes``; a bare spec's 1x1 mesh makes
+        this its plain ``mem_bytes``)."""
+        spec = platform.spec
+        return float(getattr(spec, "total_mem_bytes",
+                             getattr(spec, "mem_bytes", math.inf)))
 
     # -- characterisation ---------------------------------------------------
 

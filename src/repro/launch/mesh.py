@@ -19,7 +19,11 @@ from jax.sharding import Mesh
 from repro.models.common import Rules
 
 __all__ = ["make_production_mesh", "make_host_mesh", "rules_for",
-           "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
+           "HostMeshError", "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
+
+
+class HostMeshError(ValueError):
+    """A host mesh request that the local device set cannot satisfy."""
 
 SINGLE_POD_SHAPE = (16, 16)            # 256 chips (one v5e pod in this study)
 MULTI_POD_SHAPE = (2, 16, 16)          # 2 pods = 512 chips
@@ -31,11 +35,34 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int | None = None) -> Mesh:
-    """Small mesh over whatever local devices exist (tests / examples)."""
-    devs = np.array(jax.devices())
-    n = data or len(devs)
-    return Mesh(devs[:n].reshape(n, 1), ("data", "model"))
+def make_host_mesh(data: int | None = None, model: int = 1) -> Mesh:
+    """Small (data, model) mesh over local devices (tests / examples).
+
+    ``data=None`` uses every local device not claimed by the model axis.
+    Raises :class:`HostMeshError` (never a bare numpy reshape error) when
+    the request exceeds the local device count, naming what is available
+    and the XLA flag that fakes more.
+    """
+    devs = jax.devices()
+    avail = len(devs)
+    if model < 1:
+        raise HostMeshError(f"model axis size must be >= 1, got {model}")
+    if data is None:
+        if avail % model:
+            raise HostMeshError(
+                f"model axis {model} does not divide the {avail} available "
+                f"devices; pass data= explicitly")
+        data = avail // model
+    if data < 1:
+        raise HostMeshError(f"data axis size must be >= 1, got {data}")
+    need = data * model
+    if need > avail:
+        raise HostMeshError(
+            f"host mesh ({data}, {model}) needs {need} devices but only "
+            f"{avail} are available; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before the "
+            f"first jax import to fake more")
+    return Mesh(np.array(devs[:need]).reshape(data, model), ("data", "model"))
 
 
 def rules_for(mesh: Mesh) -> Rules:

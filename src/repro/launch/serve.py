@@ -47,7 +47,7 @@ class ServeEngine:
     """
 
     def __init__(self, cfg, batch: int, prompt_len: int, max_seq: int | None = None,
-                 seed: int = 0):
+                 seed: int = 0, mesh=None):
         import jax
 
         from repro.models import build_model
@@ -60,9 +60,44 @@ class ServeEngine:
         self.max_seq = max_seq or (prompt_len + 64)
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed))
-        self._prefill = jax.jit(lambda p, b: self.model.prefill(p, b, self.max_seq))
-        self._decode = jax.jit(self.model.decode_step)
+        self.mesh = mesh
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        if mesh is not None and mesh.shape.get("data", 1) > 1:
+            # a data axis > 1 would reach XLA with mixed manual/auto
+            # shardings and abort the process inside the SPMD partitioner
+            # — refuse it here with a catchable error instead
+            raise ValueError(
+                f"ServeEngine only shards the model axis; got a mesh with "
+                f"data axis {mesh.shape['data']} — batch-parallel serving "
+                f"is not supported yet, pass make_host_mesh(data=1, "
+                f"model={tp})")
+        if tp > 1:
+            # tensor-parallel step functions; logits stay bitwise-equal
+            # to the single-device path (see repro.launch.tp)
+            from repro.launch.tp import build_tp_step_fns
+
+            prefill, decode = build_tp_step_fns(self.model, self.params,
+                                                mesh, self.max_seq)
+            self._prefill = jax.jit(prefill)
+            self._decode = jax.jit(decode)
+        else:
+            self._prefill = jax.jit(
+                lambda p, b: self.model.prefill(p, b, self.max_seq))
+            self._decode = jax.jit(self.model.decode_step)
         self._warm = False
+
+    def probe_logits(self, seed: int = 0):
+        """(prefill logits, one greedy decode step's logits) as numpy —
+        the parity probe used to assert the sharded path is bitwise."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        self.warm(seed)
+        batch = self._batch_inputs(seed)
+        cache, logits = self._prefill(self.params, batch)
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        _, dlogits = self._decode(self.params, cache, toks)
+        return np.asarray(logits), np.asarray(dlogits)
 
     def _batch_inputs(self, seed: int):
         from repro.data.pipeline import batch_for

@@ -40,7 +40,8 @@ from repro.core.allocation import mc_work_reduction
 from .executor import Executor
 from .faults import DispatchFault
 
-__all__ = ["Domain", "PlatformSpec", "RunRecordLike", "seed_for"]
+__all__ = ["Domain", "MeshPlatformSpec", "PlatformSpec", "RunRecordLike",
+           "seed_for"]
 
 
 def seed_for(base_seed: int, platform_name: str, launch_key: Hashable,
@@ -75,9 +76,90 @@ class PlatformSpec:
     category: str        # CPU | GPU | FPGA
     device: str
     location: str
-    gflops: float        # application performance
+    gflops: float        # application performance (per device)
     rtt_ms: float        # network round-trip time
     mem_bytes: float = math.inf
+
+    # Mesh-trivial view: a bare spec is a 1x1 mesh, so every consumer of
+    # the effective characteristics (simulators, capacity hooks, latency
+    # fitters) reads these uniformly and never branches on the subclass.
+
+    @property
+    def mesh_shape(self) -> tuple[int, int]:
+        """(data, model) mesh axes; a single device is (1, 1)."""
+        return (1, 1)
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh_shape[0] * self.mesh_shape[1]
+
+    @property
+    def model_parallel(self) -> int:
+        return self.mesh_shape[1]
+
+    @property
+    def effective_gflops(self) -> float:
+        """Aggregate throughput feeding eq. 7's beta (1/gflops slope)."""
+        return self.gflops
+
+    @property
+    def effective_rtt_ms(self) -> float:
+        """Per-dispatch constant feeding eq. 7's gamma."""
+        return self.rtt_ms
+
+    @property
+    def total_mem_bytes(self) -> float:
+        """Resource budget pooled across the whole platform."""
+        return self.mem_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlatformSpec(PlatformSpec):
+    """A platform that is a *mesh* of identical devices, not one device.
+
+    The allocator sees one row per (device kind x mesh shape): eq. 7's
+    beta falls with tensor-parallel width — discounted by
+    ``tp_efficiency``, since collectives and unshardable residue keep the
+    speedup sublinear — while gamma picks up a per-hop collective cost on
+    top of the network RTT. Memory (the KV capacity dimension) pools
+    across every device in the mesh. ``gflops``/``rtt_ms``/``mem_bytes``
+    stay *per-device* numbers so the same device kind can be quoted at
+    several shapes from one datasheet row.
+    """
+
+    #: (data, model) axis sizes; model = tensor-parallel width.
+    mesh_shape: tuple[int, int] = (1, 1)
+    #: fraction of linear speedup each added model-parallel device yields.
+    tp_efficiency: float = 0.85
+    #: per-decode-step collective cost per model-parallel hop (ms).
+    collective_ms: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "mesh_shape",
+                           tuple(int(v) for v in self.mesh_shape))
+        d, m = self.mesh_shape
+        if d < 1 or m < 1:
+            raise ValueError(f"mesh_shape must be >= (1, 1), got {self.mesh_shape}")
+        if not 0.0 <= self.tp_efficiency <= 1.0:
+            raise ValueError(f"tp_efficiency must be in [0, 1], got "
+                             f"{self.tp_efficiency}")
+
+    @property
+    def tp_speedup(self) -> float:
+        """Sublinear tensor-parallel throughput multiplier."""
+        return 1.0 + self.tp_efficiency * (self.model_parallel - 1)
+
+    @property
+    def effective_gflops(self) -> float:
+        return self.gflops * self.tp_speedup
+
+    @property
+    def effective_rtt_ms(self) -> float:
+        return self.rtt_ms + self.collective_ms * (self.model_parallel - 1)
+
+    @property
+    def total_mem_bytes(self) -> float:
+        return self.mem_bytes * self.n_devices
 
 
 class RunRecordLike(Protocol):

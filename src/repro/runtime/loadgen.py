@@ -154,9 +154,22 @@ class LoadGenerator:
 # --------------------------------------------------------------------------
 
 def _bounded_pareto(u: float, lo: int, hi: int, alpha: float) -> int:
-    """Inverse-CDF sample from a Pareto truncated to [lo, hi]."""
-    la, ha = lo ** -alpha, hi ** -alpha
-    return int(min(max((la - u * (la - ha)) ** (-1.0 / alpha), lo), hi))
+    """Inverse-CDF sample from a Pareto truncated to the integers [lo, hi].
+
+    The continuous sample lives on [lo, hi + 1) and is floored, so every
+    integer bucket — including ``hi`` itself — gets the Pareto mass of its
+    unit interval. (Truncating a sample bounded at ``hi`` instead makes
+    the top bucket reachable only at exactly u == 1, which systematically
+    underweights the very tail the p99 guardrails are meant to see.)
+    """
+    if alpha <= 0:
+        raise ValueError(f"tail index alpha must be > 0, got {alpha}")
+    if not 1 <= lo <= hi:
+        raise ValueError(f"need 1 <= lo <= hi, got lo={lo}, hi={hi}")
+    la, ha = lo ** -alpha, (hi + 1) ** -alpha
+    # the clamp also absorbs float roundoff at the endpoints (e.g. at
+    # u == 0 the power can come out a hair under lo and floor below it)
+    return max(lo, min(int((la - u * (la - ha)) ** (-1.0 / alpha)), hi))
 
 
 def lm_request_factory(archs: Sequence[str] = ("qwen25_3b",),

@@ -18,6 +18,7 @@ scale the per-dispatch constant (gamma) dominates real throughput, so
 import json
 import math
 
+import numpy as np
 import pytest
 
 from repro.core.slo import SLOConfig
@@ -186,6 +187,39 @@ def test_loadgen_requests_are_heavy_tailed_and_family_tagged():
     assert toks[-1] > 3 * toks[len(toks) // 2]   # a real tail
     ids = [r.task_id for r in reqs]
     assert len(set(ids)) == len(ids)
+
+
+def test_bounded_pareto_validates_and_covers_both_endpoints():
+    from repro.runtime.loadgen import _bounded_pareto
+
+    with pytest.raises(ValueError, match="alpha"):
+        _bounded_pareto(0.5, 4, 64, 0.0)
+    with pytest.raises(ValueError, match="lo"):
+        _bounded_pareto(0.5, 64, 4, 1.5)
+    assert _bounded_pareto(0.0, 4, 64, 1.5) == 4
+    # u -> 1 must land in the hi bucket: before the fix int() truncation
+    # mapped the top unit interval to hi - 1 and hi was unreachable
+    assert _bounded_pareto(1.0 - 1e-12, 4, 64, 1.5) == 64
+    assert _bounded_pareto(0.3, 7, 7, 2.0) == 7   # degenerate support
+
+
+def test_bounded_pareto_bucket_masses_match_analytic_cdf():
+    """Distribution-shape regression: each integer bucket k carries the
+    continuous bounded-Pareto mass of [k, k+1) on [lo, hi+1) — including
+    the hi bucket, which used to get (truncated) zero mass."""
+    from repro.runtime.loadgen import _bounded_pareto
+
+    lo, hi, alpha, n = 4, 64, 1.5, 200_000
+    rng = np.random.default_rng(7)
+    draws = np.array([_bounded_pareto(u, lo, hi, alpha) for u in rng.random(n)])
+    assert draws.min() >= lo and draws.max() == hi
+
+    la, ha = lo ** -alpha, (hi + 1.0) ** -alpha
+    cdf = lambda x: (la - x ** -alpha) / (la - ha)  # noqa: E731
+    for k in (lo, 5, 8, 16, 32, 63, hi):
+        want = cdf(k + 1.0) - cdf(float(k))
+        got = (draws == k).mean()
+        assert got == pytest.approx(want, rel=0.08, abs=2e-3), k
 
 
 def test_loadgen_scenario_feeds_existing_scenario_object():

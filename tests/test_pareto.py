@@ -1,0 +1,70 @@
+"""Pareto surface helpers (core/pareto.py): the epsilon-constraint sweep,
+the per-platform Fig 9 curves, and the non-dominated filter."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.heuristic import proportional_allocation
+from repro.core.milp import milp_allocation
+from repro.core.pareto import ParetoPoint, pareto_filter, platform_curves, sweep
+
+DELTA = np.array([[2.0, 1.0], [8.0, 4.0]])
+GAMMA = np.array([[0.1, 0.1], [0.0, 0.0]])
+
+
+def test_sweep_one_point_per_accuracy_monotone_makespan():
+    accuracies = [0.5, 0.2, 0.1]
+    points = sweep(DELTA, GAMMA, accuracies, proportional_allocation)
+    assert [p.accuracy for p in points] == accuracies
+    for p in points:
+        assert isinstance(p, ParetoPoint)
+        assert p.solver == "heuristic"
+        assert p.solve_time >= 0
+        assert p.allocation.A.shape == DELTA.shape
+        # columns of the allocation are task shares
+        np.testing.assert_allclose(p.allocation.A.sum(axis=0), 1.0)
+    # tighter accuracy (smaller c) means more work: makespan must not fall
+    mks = [p.makespan for p in points]
+    assert mks == sorted(mks)
+
+
+def test_sweep_solver_is_pluggable():
+    heur = sweep(DELTA, GAMMA, [0.2], proportional_allocation)[0]
+    opt = sweep(DELTA, GAMMA, [0.2],
+                lambda p: milp_allocation(p, time_limit=10))[0]
+    assert opt.solver == "milp"
+    # the optimiser can only improve on the proportional bound
+    assert opt.makespan <= heur.makespan * (1 + 1e-6)
+
+
+def test_platform_curves_analytic_values_and_crossover():
+    acc = [1.0, 0.1]
+    curves = platform_curves(DELTA, GAMMA, acc)
+    assert curves.shape == (2, 2)
+    # platform i at accuracy c: sum_j delta[i, j] / c^2 + sum_j gamma[i, j]
+    np.testing.assert_allclose(curves[0], [3.0 / 1.0 + 0.2, 3.0 / 0.01 + 0.2])
+    np.testing.assert_allclose(curves[1], [12.0, 1200.0])
+    # the gamma-free slow platform wins at tight accuracy only in reverse:
+    # compute dominates there, so the 4x-faster platform 0 pulls ahead
+    assert curves[0, 1] < curves[1, 1]
+    # at loose accuracy the constant term decides (here platform 0 still
+    # wins; flip the gammas to check the geographic ordering regime)
+    flipped = platform_curves(DELTA, np.array([[10.0, 10.0], [0.0, 0.0]]), [10.0])
+    assert flipped[1, 0] < flipped[0, 0]
+
+
+def test_pareto_filter_keeps_non_dominated_frontier():
+    pts = [(0.1, 9.0), (0.2, 4.0), (0.2, 5.0), (0.3, 4.5), (0.4, 1.0)]
+    out = pareto_filter(pts)
+    assert out == [(0.1, 9.0), (0.2, 4.0), (0.4, 1.0)]
+    # every input point is dominated by (or is) a frontier point
+    for acc, mk in pts:
+        assert any(a <= acc and m <= mk for a, m in out)
+
+
+def test_pareto_filter_trivial_cases():
+    assert pareto_filter([]) == []
+    assert pareto_filter([(1.0, 1.0)]) == [(1.0, 1.0)]
+    with pytest.raises(TypeError):
+        pareto_filter(None)
